@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, table printing, artifact output."""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def bench(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def table(title: str, header: list[str], rows: list[list]) -> None:
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) for i, h in enumerate(header)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    sys.stdout.flush()
+
+
+def save_artifact(name: str, payload: dict) -> None:
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1, default=str))

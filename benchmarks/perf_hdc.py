@@ -1,0 +1,61 @@
+"""HDC encode perf ladder: the paper-faithful baseline and each
+optimization step, measured on this host (XLA CPU) — the wall-clock
+side of the section-Perf iteration log (the TPU-side is the dry-run
+roofline of the hdc cell).
+
+Rungs:
+  0 baseline-HDC encode (P x L bind+bundle, matmul-contracted)
+  1 uHD naive compare (paper-faithful semantics, (B,H,D) broadcast)
+  2 uHD blocked compare (D-tiled, bounded transient)
+  3 uHD MXU-unary matmul (thermometer x one-hot binary GEMM)
+  4 uHD fused Pallas kernel (interpret on CPU -> report TPU structure only)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench, save_artifact, table
+from repro.core import encoding, sobol
+from repro.data import load_dataset
+
+
+def run(b: int = 256, d: int = 4096) -> dict:
+    ds = load_dataset("synth_mnist", n_train=b, n_test=1)
+    h, levels = ds.n_features, 16
+    x = jnp.asarray(ds.train_images[:b])
+    x_q = encoding.quantize_images(x, levels)
+    tab = jnp.asarray(sobol.sobol_table_for_features(h, d, levels))
+    key = jax.random.PRNGKey(0)
+    p, lv = encoding.make_baseline_codebooks(key, h, d, levels)
+
+    rungs = {
+        "baseline PxL": jax.jit(lambda xq: encoding.baseline_encode(xq, p, lv)),
+        "uHD naive": jax.jit(lambda xq: encoding.uhd_encode(xq, tab)),
+        "uHD blocked": jax.jit(lambda xq: encoding.uhd_encode_blocked(xq, tab)),
+        "uHD unary-MXU": jax.jit(
+            lambda xq: encoding.uhd_encode_unary_matmul(xq, tab, levels)
+        ),
+    }
+    want = np.asarray(rungs["uHD naive"](x_q))
+    rows, payload = [], {}
+    t0 = None
+    for name, fn in rungs.items():
+        t = bench(fn, x_q, iters=3)
+        if "uHD" in name:
+            np.testing.assert_array_equal(np.asarray(fn(x_q)), want)
+        if t0 is None:
+            t0 = t
+        rows.append([name, f"{t*1e3:8.2f} ms", f"{t0/t:5.2f}x",
+                     f"{b*h*d/t/1e9:7.1f} Gbit-ops/s"])
+        payload[name] = t
+    table(f"HDC encode ladder (B={b}, H={h}, D={d}, this host)",
+          ["rung", "time", "vs baseline", "throughput"], rows)
+    save_artifact("perf_hdc", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,163 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Section-Perf hillclimbing: hypothesis -> change -> re-lower -> compare.
+
+Three cells (chosen per the assignment criteria) plus the paper's own
+workload:
+
+  A. moonshot-v1-16b-a3b x train_4k  (most collective-bound cell)
+       it1: MoE dispatch gspmd -> shard_map local + all-to-all (EP)
+       it2: capacity factor 1.25 -> 1.0
+  B. qwen3-32b x prefill_32k         (worst memory-term big dense cell)
+       it1: remat "nothing" -> "dots" (recompute less in bwd-free prefill)
+       it2: attention block_kv 1024 -> 2048 (fewer pass overheads)
+  C. hdc fit (paper's technique)     (65536 imgs x 784 feat, D=8192)
+       it1: VPU compare encode -> MXU unary matmul encode
+       it2: stored threshold table -> on-the-fly Sobol (memory term)
+
+Each iteration's record lands in artifacts/perf/<cell>__<it>.json; the
+narrative (hypothesis, napkin math, confirmed/refuted) lives in
+EXPERIMENTS.md section Perf.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --cell A
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "perf"
+
+
+def _record(name: str, rec: dict) -> None:
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(rec, indent=1, default=str))
+    t = rec.get("terms")
+    if t:
+        print(
+            f"  -> compute {t['compute_s']*1e3:10.2f} ms | memory "
+            f"{t['memory_s']*1e3:10.2f} ms | collective {t['collective_s']*1e3:10.2f} ms "
+            f"({t['dominant']}-bound)"
+        )
+
+
+def cell_a() -> None:
+    from repro.launch.dryrun import run_cell
+
+    print("[A] moonshot-v1-16b-a3b x train_4k (collective-bound)")
+    print(" it0 baseline: gspmd global sort dispatch")
+    rec = run_cell("moonshot-v1-16b-a3b", "train_4k", do_roofline=True,
+                   overrides={"moe_impl": "gspmd"})
+    _record("A__it0_gspmd", rec)
+    print(" it1: shard_map local dispatch + all-to-all over model axis")
+    rec = run_cell("moonshot-v1-16b-a3b", "train_4k", do_roofline=True,
+                   overrides={"moe_impl": "local"})
+    _record("A__it1_local_dispatch", rec)
+    print(" it2: + capacity factor 1.25 -> 1.0")
+    rec = run_cell("moonshot-v1-16b-a3b", "train_4k", do_roofline=True,
+                   overrides={"moe_impl": "local", "moe_capacity": 1.0})
+    _record("A__it2_capacity1", rec)
+
+
+def cell_b() -> None:
+    from repro.launch.dryrun import run_cell
+
+    print("[B] qwen3-32b x prefill_32k (memory-bound)")
+    print(" it0 baseline: remat=nothing, block_kv=1024")
+    rec = run_cell("qwen3-32b", "prefill_32k", do_roofline=True)
+    _record("B__it0_base", rec)
+    print(" it1: remat off for prefill (no backward -> recompute is waste)")
+    rec = run_cell("qwen3-32b", "prefill_32k", do_roofline=True,
+                   overrides={"remat": False})
+    _record("B__it1_no_remat", rec)
+    print(" it2: + attention blocks q/kv 512/1024 -> 1024/4096")
+    rec = run_cell("qwen3-32b", "prefill_32k", do_roofline=True,
+                   overrides={"remat": False, "attn_block_q": 1024,
+                              "attn_block_kv": 4096})
+    _record("B__it2_bigger_blocks", rec)
+
+
+def cell_c() -> None:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.analysis import roofline
+    from repro.core import HDCConfig, fit, sobol
+    from repro.core import encoding
+    from repro.distributed.sharding import set_current_mesh
+    from repro.launch.dryrun import _cell_stats, _memory
+    from repro.launch.mesh import make_production_mesh
+
+    print("[C] uHD fit 65536x784 D=8192 on the 256-chip pod (paper cell)")
+    mesh = make_production_mesh()
+    set_current_mesh(mesh)
+    n, h, d, levels = 65536, 784, 8192, 16
+
+    def lower(fit_fn, books):
+        images = jax.ShapeDtypeStruct((n, h), jnp.float32,
+                                      sharding=NamedSharding(mesh, P("data", None)))
+        labels = jax.ShapeDtypeStruct((n,), jnp.int32,
+                                      sharding=NamedSharding(mesh, P("data")))
+        with mesh:
+            c = jax.jit(fit_fn).lower(books, images, labels).compile()
+        stats = _cell_stats(c)
+        stats["memory"] = _memory(c)
+        # VPU-executed compare/elementwise work runs ~16x below MXU peak;
+        # report both unit assignments (see EXPERIMENTS.md)
+        t = roofline.RooflineTerms(stats["flops"], stats["bytes"], stats["coll_bytes"])
+        stats["terms"] = t.asdict()
+        stats["terms"]["compute_vpu_s"] = stats["flops"] / (roofline.PEAK_FLOPS / 16)
+        return stats
+
+    table_spec = NamedSharding(mesh, P(None, "model"))
+
+    for it, impl in (("it0_vpu_compare", "blocked"), ("it1_unary_mxu", "unary_matmul")):
+        cfg = HDCConfig(n_features=h, n_classes=16, d=d, encode_impl=impl)
+        books = {"sobol": jax.ShapeDtypeStruct((h, d), jnp.int8, sharding=table_spec)}
+        print(f" {it}: encode_impl={impl}")
+        rec = lower(lambda b, i, l: fit(cfg, b, i, l), books)
+        _record(f"C__{it}", rec)
+
+    print(" it2: dynamic Sobol generation (no (H,D) table in HBM)")
+
+    def fit_dynamic(books, images, labels):
+        cfg = HDCConfig(n_features=h, n_classes=16, d=d)
+        x_q = encoding.quantize_images(images, levels)
+        # regenerate quantized thresholds from the (H, 32) direction
+        # matrix on the fly (what kernels/encode_bundle.py does in VMEM)
+        from repro.kernels import ref as kref
+
+        raw = kref.sobol_tile(books["dirs"], jnp.uint32(1), d)
+        tab = (raw >> jnp.uint32(32 - 4)).astype(jnp.int32)
+        hvs = encoding.uhd_encode_unary_matmul(x_q, tab, levels)
+        sums = encoding.bundle_by_class(hvs, labels, 16)
+        return sums
+
+    dirs = jax.ShapeDtypeStruct((h, 32), jnp.uint32,
+                                sharding=NamedSharding(mesh, P(None, None)))
+    rec = lower(fit_dynamic, {"dirs": dirs})
+    _record("C__it2_dynamic_sobol", rec)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=["A", "B", "C", "all"], default="all")
+    args = ap.parse_args()
+    t0 = time.time()
+    if args.cell in ("A", "all"):
+        cell_a()
+    if args.cell in ("B", "all"):
+        cell_b()
+    if args.cell in ("C", "all"):
+        cell_c()
+    print(f"perf iterations done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""Render the roofline table (EXPERIMENTS.md section Roofline) from the
+dry-run artifacts in artifacts/dryrun/."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import save_artifact, table
+from repro.analysis.roofline import RooflineTerms
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def run() -> dict:
+    rows = []
+    payload = {}
+    for rec in load_cells("single"):
+        name = f"{rec['arch']} x {rec['shape']}"
+        if "skipped" in rec:
+            rows.append([name, "SKIP (full attention @500k)", "", "", "", "", ""])
+            continue
+        if "terms" not in rec:
+            rows.append([name, "compiled (no roofline pass)", "", "", "", "", ""])
+            continue
+        t = rec["terms"]
+        rows.append([
+            name,
+            f"{t['compute_s']*1e3:9.2f}",
+            f"{t['memory_s']*1e3:9.2f}",
+            f"{t['collective_s']*1e3:9.2f}",
+            t["dominant"],
+            f"{rec.get('useful_flops_ratio', 0):.2f}",
+            f"{rec['memory']['peak_bytes_est']/2**30:.1f}",
+        ])
+        payload[name] = {**t, "useful_ratio": rec.get("useful_flops_ratio"),
+                         "peak_gib": rec["memory"]["peak_bytes_est"] / 2**30}
+    rows.sort()
+    table(
+        "Roofline (single-pod 256xv5e; ms/step; loop-corrected)",
+        ["cell", "compute", "memory", "collective", "dominant", "6ND/HLO",
+         "peak GiB/dev"],
+        rows,
+    )
+    save_artifact("roofline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Run every benchmark (one per paper table + roofline + perf ladder).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        perf_hdc,
+        roofline_report,
+        table1_runtime_memory,
+        table2_energy_proxy,
+        table3_efficiency,
+        table4_accuracy_mnist,
+        table5_accuracy_datasets,
+    )
+
+    jobs = [
+        ("table1", lambda: table1_runtime_memory.run()),
+        ("table2", lambda: table2_energy_proxy.run()),
+        ("table3", lambda: table3_efficiency.run()),
+        ("table4", lambda: table4_accuracy_mnist.run(
+            n_train=1024 if args.fast else 2048,
+            n_test=256 if args.fast else 512,
+            iters=3 if args.fast else 5,
+        )),
+        ("table5", lambda: table5_accuracy_datasets.run(
+            n_train=768 if args.fast else 1536,
+            n_test=256 if args.fast else 384,
+        )),
+        ("perf_hdc", lambda: perf_hdc.run(b=128 if args.fast else 256,
+                                          d=2048 if args.fast else 4096)),
+        ("roofline", lambda: roofline_report.run()),
+    ]
+    failures = 0
+    for name, job in jobs:
+        t0 = time.time()
+        try:
+            job()
+            print(f"[{name} done in {time.time()-t0:.1f}s]")
+        except Exception:
+            failures += 1
+            print(f"[{name} FAILED]")
+            traceback.print_exc()
+    print(f"\nbenchmarks complete; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""Paper Table II / design checkpoints 1-3: energy proxy via op/byte counts.
+
+Energy at 45 nm is not observable in software; the quantities that
+drive it are.  Per hypervector bit and per image we count primitive
+operations (comparisons, XOR/multiplies, additions, random-number
+generations) and generator-state bytes for the baseline vs uHD
+datapaths, mirroring the paper's three checkpoints:
+
+  1 stream generation   (counter+comparator vs stored-unary fetch)
+  2 hypervector compare (binary comparator vs AND/OR unary comparator)
+  3 accumulate+binarize (popcount + separate subtractor vs fused TOB)
+
+The per-op counts follow directly from the algorithm definitions in
+core/encoding.py (each is asserted against the implementation's
+einsum/compare structure in tests).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import save_artifact, table
+
+
+def op_counts(h: int, d: int, levels: int) -> dict:
+    base = {
+        # generation: P (H*D comparisons vs t=0.5) + L (levels*D comparisons)
+        "gen_rand_draws": h * d + levels * d,
+        "gen_compares": h * d + levels * d,
+        # bind: H*D XOR (multiplies in +-1), bundle: H*D adds
+        "bind_xor": h * d,
+        "bundle_adds": h * d,
+        # binarize: D subtract+compare in a separate stage
+        "binarize_ops": 2 * d,
+        "generator_bytes": h * d + (levels + 1) * d,  # stored P and L (int8)
+    }
+    uhd = {
+        "gen_rand_draws": 0,  # deterministic Sobol
+        "gen_compares": 0,  # thresholds pre-quantized (or Gray-code XOR)
+        "bind_xor": 0,  # position HVs eliminated (contribution 2)
+        "compare_ops": h * d,  # one unary/int compare per bit
+        "bundle_adds": h * d,
+        "binarize_ops": 0,  # fused TOB epilogue (contribution 5)
+        "generator_bytes": h * d // 2,  # 4-bit quantized Sobol (M=4)
+        "generator_bytes_dynamic": h * 32 * 4,  # direction vectors only
+    }
+    return {"baseline": base, "uhd": uhd}
+
+
+def run(h: int = 784, levels: int = 16) -> dict:
+    payload = {}
+    rows = []
+    for d in (1024, 2048, 8192):
+        c = op_counts(h, d, levels)
+        b, u = c["baseline"], c["uhd"]
+        b_ops = sum(v for k, v in b.items() if not k.endswith("bytes"))
+        u_ops = sum(v for k, v in u.items() if not k.endswith("bytes") and not k.endswith("dynamic"))
+        rows.append([
+            f"D={d}", f"{b_ops/1e6:.2f}M", f"{u_ops/1e6:.2f}M",
+            f"{b_ops/u_ops:.2f}x",
+            f"{b['generator_bytes']/1024:.0f} KB",
+            f"{u['generator_bytes']/1024:.0f} KB",
+            f"{u['generator_bytes_dynamic']/1024:.1f} KB",
+        ])
+        payload[f"d{d}"] = c | {"ops_ratio": b_ops / u_ops}
+    table(
+        "Table II analogue: primitive ops + generator bytes per image",
+        ["D", "base ops", "uHD ops", "ratio", "base state", "uHD state",
+         "uHD dyn state"],
+        rows,
+    )
+    print("paper (45nm, per-HV energy): baseline 171-4024 pJ vs uHD 0.79-6.3 pJ")
+    save_artifact("table2", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Table IV + Fig. 6: accuracy, baseline iterations vs uHD single pass.
+
+Real MNIST is not bundled offline; the synthetic stroke-image analogue
+(data/images.py) reproduces the qualitative claims: uHD @ i=1 matches
+or beats the *average* pseudo-random baseline draw, the baseline
+fluctuates across draws (Fig. 6a), and accuracy grows with D.
+EXPERIMENTS.md labels these numbers synthetic; with $REPRO_DATA_DIR
+pointing at MNIST IDX files the same benchmark runs the real thing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_artifact, table
+from repro.core import HDCConfig, baseline_iterative_search, train_and_eval
+from repro.data import load_dataset
+
+
+def run(n_train: int = 2048, n_test: int = 512, iters: int = 5) -> dict:
+    ds = load_dataset("mnist", n_train=n_train, n_test=n_test)
+    rows, payload = [], {"dataset": ds.name, "synthetic": ds.synthetic}
+    for d in (1024, 2048, 8192):
+        kw = dict(n_features=ds.n_features, n_classes=ds.n_classes, d=d)
+        uhd = train_and_eval(HDCConfig(**kw), ds.train_images, ds.train_labels,
+                             ds.test_images, ds.test_labels)
+        base = baseline_iterative_search(
+            HDCConfig(**kw), ds.train_images, ds.train_labels,
+            ds.test_images, ds.test_labels, iterations=iters,
+        )
+        rows.append([
+            f"{d//1024}K", f"{100*np.mean(base):.2f}", f"{100*np.min(base):.2f}",
+            f"{100*np.max(base):.2f}", f"{100*np.std(base):.2f}",
+            f"{100*uhd:.2f}",
+            "yes" if uhd >= np.mean(base) else "no",
+        ])
+        payload[f"d{d}"] = {"uhd": uhd, "baseline": base}
+    table(
+        f"Table IV analogue on {ds.name} ({'synthetic' if ds.synthetic else 'real'})",
+        ["D", "base avg%", "base min%", "base max%", "base std%", "uHD i=1 %",
+         "uHD>=avg"],
+        rows,
+    )
+    print(f"paper (real MNIST): base avg 82.6-88.6 vs uHD 84.44/87.04/88.41 @ i=1")
+    save_artifact("table4", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Quickstart: uHD image classification in ~30 lines (the paper, end to end).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import HDCConfig, train_and_eval, baseline_iterative_search  # noqa: E402
+from repro.data import load_dataset  # noqa: E402
+
+# 1. data: MNIST if $REPRO_DATA_DIR has it, else the synthetic analogue
+ds = load_dataset("mnist", n_train=2048, n_test=512)
+print(f"dataset: {ds.name} ({'synthetic' if ds.synthetic else 'real'}), "
+      f"{ds.n_features} features, {ds.n_classes} classes")
+
+# 2. uHD: deterministic Sobol encoding, position-free, single training pass
+cfg = HDCConfig(n_features=ds.n_features, n_classes=ds.n_classes, d=4096)
+acc = train_and_eval(cfg, ds.train_images, ds.train_labels,
+                     ds.test_images, ds.test_labels)
+print(f"uHD  @ i=1 (one pass):      accuracy = {acc:.4f}")
+
+# 3. the baseline the paper compares against: pseudo-random P x L encoding,
+#    which needs iterative re-draws to find good vectors
+accs = baseline_iterative_search(cfg, ds.train_images, ds.train_labels,
+                                 ds.test_images, ds.test_labels, iterations=3)
+print(f"baseline over 3 draws:      avg = {sum(accs)/len(accs):.4f}  "
+      f"(min {min(accs):.4f}, max {max(accs):.4f})")
+print("uHD >= baseline average:", acc >= sum(accs) / len(accs))

@@ -1,0 +1,201 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_device   / PEAK_FLOPS      (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device   / HBM_BW          (819 GB/s)
+    collective = coll_bytes_per_device  / LINK_BW         (~50 GB/s/link ICI)
+
+`compiled.cost_analysis()` on an SPMD executable reports **per-device**
+FLOPs/bytes (verified empirically in tests).  Collective bytes are not
+in cost_analysis: we parse the partitioned HLO text and sum *operand*
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (and their -start async forms).
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (verified: a scan
+of N steps reports 1/N of the unrolled FLOPs).  The dry-run therefore
+lowers auxiliary *unrolled* variants with 1 and 2 layer-periods and
+reconstructs:  body = u2 - u1,  outside = u1 - body,
+total = outside + n_groups * body + tail   (tail from a third variant
+when the depth does not divide the period).  See launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(
+    r"=\s+[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\("
+)
+_NAME_RE = re.compile(r"%([\w.-]+)")
+
+
+def _shapes_bytes(fragment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(fragment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum *operand* bytes per collective type from partitioned HLO text.
+
+    Modern HLO references operands by name only (`all-reduce(%dot.1)`),
+    so we first build a symbol table name -> result bytes from every
+    instruction line, then resolve each collective's operand names.
+    Async -done ops are skipped (payload counted at the -start).
+    """
+    # pass 1: result bytes of every named instruction
+    table: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        # result type is everything before the opcode name: up to the
+        # first lowercase opcode token following the shape(s)
+        cut = rhs.find(" ")
+        # handle tuple results "(f32[..], u32[..]) all-gather-start(..."
+        if rhs.startswith("("):
+            cut = rhs.find(")") + 1
+        table[m.group(1)] = _shapes_bytes(rhs[: max(cut, 0)])
+
+    out: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group(2) == "-done":
+            continue
+        op = m.group(1)
+        operands = line[m.end():]
+        depth, end = 1, len(operands)
+        for i, ch in enumerate(operands):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        names = _NAME_RE.findall(operands[:end])
+        nbytes = sum(table.get(n, 0) for n in names)
+        if nbytes == 0:  # constant/inline operands: fall back to result bytes
+            dm = _DEF_RE.match(line)
+            if dm:
+                rhs = dm.group(2)
+                cut = rhs.find(")") + 1 if rhs.startswith("(") else rhs.find(" ")
+                nbytes = _shapes_bytes(rhs[: max(cut, 0)])
+        out[op] += nbytes
+        counts[op] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_dev / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        """Step time lower bound if the three units never overlap-stall:
+        max of the terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def asdict(self) -> dict[str, Any]:
+        return {
+            "flops_dev": self.flops_dev,
+            "bytes_dev": self.bytes_dev,
+            "coll_bytes_dev": self.coll_bytes_dev,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+        }
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful model FLOPs per step: 6*N*D (dense) / 6*N_active*D (MoE).
+
+    decode: D = batch tokens per step; train has the 3x backward factor
+    already folded into the 6 (2 fwd + 4 bwd per param per token); for
+    inference kinds we use 2*N*D.
+    """
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def combine_unrolled(u1: dict, u2: dict, n_groups: int, tail: dict | None, full: dict):
+    """Reconstruct loop-corrected totals from the unrolled variants.
+
+    u1/u2/tail/full are dicts with keys flops, bytes, coll_bytes
+    (per-device).  Returns the corrected totals dict.
+    """
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        body = max(u2[k] - u1[k], 0.0)
+        outside = max(u1[k] - body, 0.0)
+        # tail variant is unrolled (period + tail) layers: outside+body+tail
+        tail_cost = max(tail[k] - u1[k], 0.0) if tail else 0.0
+        out[k] = outside + n_groups * body + tail_cost
+        out[f"{k}_body"] = body
+        out[f"{k}_outside"] = outside
+    out["raw_full"] = {k: full.get(k) for k in ("flops", "bytes", "coll_bytes")}
+    return out

@@ -1,0 +1,1 @@
+from repro.checkpoint.manager import CheckpointManager, install_sigterm_handler  # noqa: F401

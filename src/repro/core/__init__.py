@@ -1,0 +1,13 @@
+"""uHD core: Sobol LD sequences, unary bit-streams, HDC encoders and models."""
+
+from repro.core.model import (  # noqa: F401
+    HDCConfig,
+    baseline_iterative_search,
+    build_codebooks,
+    encode,
+    evaluate,
+    fit,
+    fit_streaming,
+    predict,
+    train_and_eval,
+)

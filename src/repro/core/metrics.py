@@ -1,0 +1,42 @@
+"""Similarity measures for HDC classification."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import unary
+
+
+def cosine_similarity(queries: jax.Array, class_hvs: jax.Array) -> jax.Array:
+    """Cosine similarity (B, D) x (C, D) -> (B, C) float32 (paper default)."""
+    q = queries.astype(jnp.float32)
+    c = class_hvs.astype(jnp.float32)
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    cn = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), 1e-9)
+    return qn @ cn.T
+
+
+def dot_similarity(queries: jax.Array, class_hvs: jax.Array) -> jax.Array:
+    return queries.astype(jnp.float32) @ class_hvs.astype(jnp.float32).T
+
+
+def hamming_similarity_packed(q_words: jax.Array, c_words: jax.Array, d: int) -> jax.Array:
+    """Packed-binary similarity: d - 2*hamming, (B, W) x (C, W) -> (B, C).
+
+    Both operands are binarized hypervectors packed 32 dims/word; the
+    inner loop is XOR + popcount (the paper's unary machinery at
+    inference time).
+    """
+    return unary.packed_dot_pm1(q_words[:, None, :], c_words[None, :, :], d)
+
+
+SIMILARITIES = {
+    "cosine": cosine_similarity,
+    "dot": dot_similarity,
+}
+
+
+def classify(sim: jax.Array) -> jax.Array:
+    """argmax over classes; (B, C) -> (B,) int32."""
+    return jnp.argmax(sim, axis=-1).astype(jnp.int32)

@@ -1,0 +1,157 @@
+"""Unary (thermometer) bit-stream computing primitives — uHD contributions 3-5.
+
+The paper represents M-bit quantized scalars as N = 2^M-bit unary
+bit-streams (value v => v leading 1s), fetched from a pre-stored Unary
+Stream Table (UST, Fig. 3(c)), and compares them with combinational
+logic (Fig. 4):
+
+    min(a, b)   = a AND b                      (unary streams are correlated)
+    a >= b     <=> AND-reduce(a OR NOT b) == 1  (the proposed comparator)
+
+On TPU these map to packed uint32 lanes + ``lax.population_count`` — the
+VPU is an 8x128-lane popcount/AND/OR machine, which is as close to the
+paper's gate-level circuit as the hardware allows.  These functions are
+used (a) as the *oracle semantics* of the encode kernels, (b) for the
+bit-packed hypervector pipeline (binarized HVs are stored 32 dims/word),
+and (c) by the sign-aggregation path of the gradient compressor.
+
+Everything here is jit-compatible jnp.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32  # bits per packed word
+
+
+def n_words(n_bits: int) -> int:
+    return (n_bits + WORD - 1) // WORD
+
+
+def _tail_mask(n_bits: int) -> np.ndarray:
+    """Valid-bit mask per word for an n_bits stream (uint32, (n_words,))."""
+    bits = np.arange(n_words(n_bits) * WORD, dtype=np.uint64)
+    return np.packbits(  # noqa: NPY002 - deterministic
+        (bits < n_bits).astype(np.uint8), bitorder="little"
+    ).view(np.uint32)
+
+
+def to_thermometer(x: jax.Array, n_bits: int) -> jax.Array:
+    """Unary/thermometer code: value v in [0, n_bits] -> (..., n_bits) bool.
+
+    Bit i is 1 iff i < v, i.e. v leading ones (LSB-first convention).
+    """
+    levels = jnp.arange(n_bits, dtype=jnp.int32)
+    return levels < x[..., None].astype(jnp.int32)
+
+
+def from_thermometer(bits: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_thermometer` (sums the ones)."""
+    return bits.astype(jnp.int32).sum(-1)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack trailing bool axis into uint32 words, LSB-first.
+
+    (..., n_bits) bool -> (..., n_words) uint32.  Pads with zeros.
+    """
+    n_bits = bits.shape[-1]
+    pad = n_words(n_bits) * WORD - n_bits
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1
+        )
+    words = bits.reshape(bits.shape[:-1] + (-1, WORD)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)).astype(jnp.uint32)
+    return (words * weights).sum(-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """(..., n_words) uint32 -> (..., n_bits) bool (LSB-first)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :n_bits].astype(bool)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Total number of set bits along the trailing word axis -> int32."""
+    return jax.lax.population_count(words).astype(jnp.int32).sum(-1)
+
+
+# ---------------------------------------------------------------------------
+# The uHD unary comparator (paper Fig. 4) and friends
+# ---------------------------------------------------------------------------
+
+
+def unary_min(a_words: jax.Array, b_words: jax.Array) -> jax.Array:
+    """min of two unary streams == bit-wise AND (streams are correlated)."""
+    return a_words & b_words
+
+
+def unary_ge(a_words: jax.Array, b_words: jax.Array, n_bits: int) -> jax.Array:
+    """uHD comparator: a >= b  <=>  AND-reduce(a OR NOT b) over valid bits.
+
+    Works on packed words; padding bits are forced to 1 before the reduce.
+    Returns bool (...,).
+    """
+    mask = jnp.asarray(_tail_mask(n_bits))
+    t = a_words | (~b_words & mask)  # NOT limited to valid bits
+    t = t | ~mask  # padding participates as 1s
+    full = jnp.uint32(0xFFFFFFFF)
+    return (t == full).all(axis=-1)
+
+
+def unary_stream_table(n_bits: int) -> jax.Array:
+    """The UST (Fig. 3(c)): packed unary streams for every value 0..n_bits.
+
+    Shape (n_bits + 1, n_words) uint32.  Hypervector generation fetches
+    streams from this table instead of running a counter+comparator.
+    """
+    vals = jnp.arange(n_bits + 1)
+    return pack_bits(to_thermometer(vals, n_bits))
+
+
+def fetch_unary(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Associative fetch of pre-stored unary streams (paper Fig. 3(c))."""
+    return table[x]
+
+
+# ---------------------------------------------------------------------------
+# Packed hypervector utilities (binarized HVs, 32 dims per uint32)
+# ---------------------------------------------------------------------------
+
+
+def pack_hypervector(hv_pm1: jax.Array) -> jax.Array:
+    """Pack a ±1 (or sign-of-sum int) hypervector: bit = (hv >= 0)."""
+    return pack_bits(hv_pm1 >= 0)
+
+
+def unpack_hypervector(words: jax.Array, d: int) -> jax.Array:
+    """Packed bits -> ±1 int8 hypervector."""
+    bits = unpack_bits(words, d)
+    return jnp.where(bits, jnp.int8(1), jnp.int8(-1))
+
+
+def hamming_distance_packed(a_words: jax.Array, b_words: jax.Array) -> jax.Array:
+    """Hamming distance between packed binary hypervectors (XOR+popcount)."""
+    return popcount(a_words ^ b_words)
+
+
+def packed_dot_pm1(a_words: jax.Array, b_words: jax.Array, d: int) -> jax.Array:
+    """<a, b> for ±1 vectors stored packed: d - 2 * hamming."""
+    return d - 2 * hamming_distance_packed(a_words, b_words)
+
+
+def majority_threshold(counts: jax.Array, h: int) -> jax.Array:
+    """Concurrent binarization (paper contribution 5): popcount >= TOB.
+
+    `counts` holds the number of +1 contributions among `h` votes (the
+    popcount register in Fig. 5); TOB = H/2.  Returns the sign bit.  On
+    TPU this is the fused epilogue of the bundling kernel — the int32
+    accumulator never makes an extra HBM round-trip.
+    """
+    return counts * 2 >= h

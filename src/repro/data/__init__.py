@@ -1,0 +1,1 @@
+from repro.data.images import ImageDataset, load_dataset, make_synthetic  # noqa: F401

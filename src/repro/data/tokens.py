@@ -1,0 +1,74 @@
+"""Deterministic synthetic LM token pipeline.
+
+Every batch is a pure function of (seed, step) — resuming from a
+checkpoint at step k regenerates exactly the batches k, k+1, ... with
+no state to restore and no skip-ahead cost (the fault-tolerance
+contract).  Per-host sharding takes the host's slice of the global
+batch, so multi-host training reads no redundant data.
+
+The synthetic stream is Zipf-ish unigrams with short-range repetition
+structure so perplexity is learnable (loss decreases measurably within
+a few hundred steps on the quickstart config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    d_model: int = 0  # for embedding-input archs (musicgen stub frontend)
+    n_ctx_tokens: int = 0  # for VLM stub patch embeddings
+
+    def batch_at(self, step: int) -> dict[str, jax.Array]:
+        """The full global batch for `step` (pure function)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        kz, kr, ke, kc = jax.random.split(key, 4)
+        b, s = self.global_batch, self.seq_len
+        # Zipf-ish marginal via squared uniform over log-vocab
+        u = jax.random.uniform(kz, (b, s))
+        toks = jnp.exp(u * np.log(self.vocab_size)).astype(jnp.int32) - 1
+        # short-range structure: with p=0.35 copy the token 2 positions back
+        rep = jax.random.uniform(kr, (b, s)) < 0.35
+        shifted = jnp.roll(toks, 2, axis=1)
+        toks = jnp.where(rep, shifted, toks)
+        toks = jnp.clip(toks, 0, self.vocab_size - 1)
+        out: dict[str, jax.Array] = {"tokens": toks}
+        if self.d_model:
+            out["embeddings"] = jax.random.normal(
+                ke, (b, s, self.d_model), jnp.bfloat16
+            )
+        if self.n_ctx_tokens:
+            out["ctx"] = jax.random.normal(
+                kc, (b, self.n_ctx_tokens, self.d_model), jnp.bfloat16
+            )
+        return out
+
+    def host_batch_at(self, step: int, host_index: int, n_hosts: int) -> dict:
+        """This host's slice of the global batch (per-host data loading)."""
+        full = self.batch_at(step)
+        per = self.global_batch // n_hosts
+        return jax.tree.map(
+            lambda x: x[host_index * per : (host_index + 1) * per], full
+        )
+
+
+def pipeline_for(cfg, shape, seed: int = 0) -> TokenPipeline:
+    """TokenPipeline matching a (ModelConfig, ShapeConfig) cell."""
+    return TokenPipeline(
+        vocab_size=cfg.vocab_size,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        seed=seed,
+        d_model=cfg.d_model if (cfg.input_mode == "embeddings" or cfg.n_ctx_tokens) else 0,
+        n_ctx_tokens=cfg.n_ctx_tokens,
+    )

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules,
+    abstract_params,
+    constrain,
+    constrain_batch,
+    get_current_mesh,
+    set_current_mesh,
+)

@@ -1,0 +1,111 @@
+"""Gradient compression for the cross-pod data-parallel reduction.
+
+Inter-pod links (DCN class) are ~10x slower than intra-pod ICI, so the
+cross-pod gradient all-reduce is the scaling bottleneck of multi-pod
+data parallelism.  We compress it with int8 quantization + error
+feedback (1-bit-Adam family; Seide et al. 2014, Karimireddy et al.
+2019):
+
+    v   = g + e                 (fold in the residual carried in opt state)
+    s   = max|v| (per leaf)     (psum-max across pods -> shared scale)
+    q   = round(v / s * 127)    int8
+    ghat= psum(q) / n_pods * s / 127
+    e'  = v - dequant(q)        (local quantization error, fed back)
+
+The hierarchical pattern: full-precision psum over the intra-pod "data"
+axis first (cheap ICI), then the compressed psum over "pod".  Error
+feedback makes the iteration converge to the uncompressed fixed point
+(tests/test_compression.py proves convergence on a quadratic and exact
+byte accounting 4x reduction).
+
+These functions run inside shard_map (they use axis names); see
+`compressed_grad_sync` for the drop-in used by train steps.  The packed
+sign-aggregation variant reuses the uHD popcount machinery (the paper's
+unary bit-streams showing up in the distributed-optimizer layer).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import unary
+
+Tree = Any
+
+
+def quantize_int8(v: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(v / scale * 127.0), -127, 127).astype(jnp.int8)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * (scale / 127.0)
+
+
+def compressed_psum_leaf(
+    v: jax.Array, axis: str
+) -> tuple[jax.Array, jax.Array]:
+    """int8-compressed mean over `axis`.  Returns (mean_estimate, error)."""
+    scale = jax.lax.pmax(jnp.max(jnp.abs(v)) + 1e-12, axis)
+    q = quantize_int8(v, scale)
+    deq_local = dequantize_int8(q, scale)
+    err = v - deq_local
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis)
+    mean = total.astype(jnp.float32) * (scale / 127.0) / n.astype(jnp.float32)
+    return mean, err
+
+
+def compressed_grad_sync(
+    grads: Tree, errors: Tree, *, pod_axis: str = "pod", data_axis: str = "data"
+) -> tuple[Tree, Tree]:
+    """Hierarchical gradient sync for use inside shard_map.
+
+    Full-precision mean over the intra-pod data axis, int8
+    error-feedback mean over the pod axis.  Returns (synced_grads,
+    new_errors)."""
+
+    def leaf(g, e):
+        g = jax.lax.pmean(g, data_axis)
+        mean, err = compressed_psum_leaf(g + e, pod_axis)
+        return mean, err
+
+    pairs = jax.tree.map(leaf, grads, errors)
+    synced = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return synced, new_err
+
+
+def sign_compress_packed(v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """1-bit (sign) compression with the uHD bit-packing machinery.
+
+    Returns (packed_signs uint32[ceil(n/32)], scale = mean|v|).  The
+    majority-vote aggregation of packed signs across workers is exactly
+    the paper's popcount-with-threshold circuit (unary.majority_threshold).
+    """
+    flat = v.reshape(-1)
+    scale = jnp.mean(jnp.abs(flat)) + 1e-12
+    packed = unary.pack_bits(flat >= 0)
+    return packed, scale
+
+
+def sign_decompress_packed(packed: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    n = 1
+    for d in shape:
+        n *= d
+    signs = unary.unpack_hypervector(packed, n).astype(jnp.float32)
+    return (signs * scale).reshape(shape)
+
+
+def init_error_state(params: Tree) -> Tree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def bytes_saved(params: Tree) -> tuple[int, int]:
+    """(uncompressed, compressed) payload bytes of one cross-pod sync."""
+    raw = sum(p.size * 4 for p in jax.tree.leaves(params))
+    comp = sum(p.size * 1 for p in jax.tree.leaves(params))
+    return raw, comp

@@ -1,0 +1,187 @@
+"""Logical-axis -> mesh-axis sharding rules (the distribution engine).
+
+Every parameter carries logical axis names (see models/params.py).  A
+`ShardingRules` maps those names to mesh axes with graceful fallbacks:
+
+  * tensor-parallel ("model") axis: heads / mlp / vocab / experts / rec;
+    if the preferred dim does not divide the axis size, the next
+    candidate axis of the same tensor is tried (e.g. 10 heads on a
+    16-way mesh falls back to sharding head_dim).
+  * optional FSDP: the largest still-unsharded dim of every parameter
+    above a byte threshold is additionally sharded over the data axis
+    (required for llama-3.2-vision-90b: 180 GB bf16 -> 0.7 GB/device).
+  * batch axes of activations shard over ("pod","data") when present.
+
+Axes that would not divide are dropped, never erred on — a config that
+fits a 256-chip pod must also lower on 8 CPU devices for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> preferred mesh axis, in fallback order per tensor
+TP_LOGICAL = ("heads", "kv_heads", "mlp", "vocab", "experts", "rec", "inner",
+              "head_dim", "head_dim2")
+
+_CURRENT_MESH: list[Mesh | None] = [None]
+
+
+def set_current_mesh(mesh: Mesh | None) -> None:
+    _CURRENT_MESH[0] = mesh
+
+
+def get_current_mesh() -> Mesh | None:
+    return _CURRENT_MESH[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    model_axis: str = "model"
+    data_axis: str = "data"
+    pod_axis: str = "pod"
+    fsdp: bool = False
+    fsdp_min_bytes: int = 1 << 21  # 2 MiB
+
+    def batch_axes(self, mesh: Mesh) -> tuple[str, ...]:
+        axes = tuple(a for a in (self.pod_axis, self.data_axis) if a in mesh.axis_names)
+        return axes
+
+    # -- parameters ------------------------------------------------------
+
+    def param_spec(
+        self, shape: tuple[int, ...], axes: tuple[str | None, ...], mesh: Mesh
+    ) -> P:
+        """PartitionSpec for one parameter from its logical axes."""
+        model = self.model_axis if self.model_axis in mesh.axis_names else None
+        msize = mesh.shape[model] if model else 1
+        assign: list[Any] = [None] * len(shape)
+
+        # 0) "batch" logical axis (decode caches / recurrent states):
+        #    shard over (pod, data) when divisible
+        if "batch" in axes:
+            i = axes.index("batch")
+            b_axes = self.batch_axes(mesh)
+            bsz = math.prod(mesh.shape[a] for a in b_axes) if b_axes else 1
+            if b_axes and shape[i] % bsz == 0 and shape[i] >= bsz:
+                assign[i] = b_axes if len(b_axes) > 1 else b_axes[0]
+
+        # 1) tensor-parallel axis: first logical TP candidate that divides
+        if model:
+            for logical in TP_LOGICAL:
+                if logical in axes:
+                    i = axes.index(logical)
+                    if assign[i] is None and shape[i] % msize == 0 and shape[i] >= msize:
+                        assign[i] = model
+                        break
+
+        # 2) FSDP: largest remaining dim over the data axis — unless the
+        # data axis is already used (e.g. a "batch"-sharded decode cache)
+        data_used = any(
+            self.data_axis == a or (isinstance(a, tuple) and self.data_axis in a)
+            for a in assign
+        )
+        if self.fsdp and not data_used and self.data_axis in mesh.axis_names:
+            dsize = mesh.shape[self.data_axis]
+            nbytes = math.prod(shape) * 4
+            if nbytes >= self.fsdp_min_bytes:
+                cands = [
+                    (shape[i], i)
+                    for i in range(len(shape))
+                    if assign[i] is None and axes[i] != "layers" and shape[i] % dsize == 0
+                ]
+                if cands:
+                    _, i = max(cands)
+                    assign[i] = self.data_axis
+
+        return P(*assign)
+
+    def param_sharding(self, shape, axes, mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.param_spec(tuple(shape), tuple(axes), mesh))
+
+    # -- activations -----------------------------------------------------
+
+    def activation_spec(self, ndim: int, mesh: Mesh, *, batch_dim: int = 0) -> P:
+        """Shard the batch dim over (pod, data); leave the rest to GSPMD."""
+        axes: list[Any] = [None] * ndim
+        b = self.batch_axes(mesh)
+        if b:
+            axes[batch_dim] = b if len(b) > 1 else b[0]
+        return P(*axes)
+
+    def data_sharding(self, mesh: Mesh, ndim: int = 2) -> NamedSharding:
+        return NamedSharding(mesh, self.activation_spec(ndim, mesh))
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint if a mesh is active; identity otherwise.
+
+    Drops axes that do not divide the corresponding dimension so the
+    same model code runs on any device count (elasticity).
+    """
+    mesh = get_current_mesh()
+    if mesh is None:
+        return x
+    fixed: list[Any] = []
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        names = (ax,) if isinstance(ax, str) else tuple(ax)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            fixed.append(None)
+            continue
+        size = math.prod(mesh.shape[n] for n in names)
+        if dim % size == 0 and dim >= size:
+            fixed.append(names if len(names) > 1 else names[0])
+        else:
+            fixed.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def constrain_batch(x: jax.Array, rules: ShardingRules | None = None) -> jax.Array:
+    """Shard dim 0 over the batch mesh axes (pod, data)."""
+    mesh = get_current_mesh()
+    if mesh is None:
+        return x
+    rules = rules or ShardingRules()
+    return constrain(x, rules.activation_spec(x.ndim, mesh))
+
+
+def tree_param_shardings(mesh: Mesh, spec_tree, axes_tree, rules: ShardingRules):
+    """Mirror trees of shapes+axes -> tree of NamedShardings."""
+
+    def walk(spec, axes):
+        if isinstance(spec, dict):
+            return {k: walk(spec[k], axes[k]) for k in spec}
+        return rules.param_sharding(spec.shape, axes, mesh)
+
+    return walk(spec_tree, axes_tree)
+
+
+def abstract_params(cfg, mesh: Mesh, rules: ShardingRules, dtype=None):
+    """Pytree of ShapeDtypeStruct with NamedShardings — dry-run stand-ins
+    for the parameters (no allocation)."""
+    from repro.models import params as pmod
+
+    specs = pmod.param_specs(cfg)
+    dt = dtype or cfg.pdtype()
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = jax.ShapeDtypeStruct(
+                    v.shape, dt, sharding=rules.param_sharding(v.shape, v.axes, mesh)
+                )
+        return out
+
+    return walk(specs)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the uHD hot spots.
+
+Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec
+implementation, ops.py the jit'd padding/dispatch wrapper, ref.py the
+pure-jnp oracle.  All kernels validate on CPU via interpret=True.
+"""

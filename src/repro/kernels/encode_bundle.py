@@ -1,0 +1,147 @@
+"""Fused uHD encode+bundle Pallas kernel (the paper's core operation).
+
+Computes hv[b,d] = sum_h (2*[x[b,h] >= S[h,d]] - 1) without ever
+materializing the (B, H, D) level-hypervector tensor in HBM — the TPU
+analogue of the paper's multiplier-less, position-free encoding
+(contributions 1-2): the only HBM traffic is the quantized inputs and
+the (B, D) accumulator.
+
+Tiling: grid (B/bt, D/dt, H/ht); the H axis is the reduction — the
+output block index_map ignores it, so the accumulator block stays
+resident in VMEM across the H sweep (initialized at h==0).  The compare
+broadcast (bt, ht, dt) lives entirely in VREG/VMEM; ht*dt is chosen so
+the working set (x tile + sobol tile + compare cube + acc) fits VMEM
+comfortably: 8*128*512*4B ≈ 2 MiB.
+
+A `generate_sobol` variant regenerates the Sobol tile *inside* the
+kernel from the (H, 32) direction matrix (Gray-code XOR), eliminating
+the (H, D) threshold table from HBM entirely — the TPU mapping of the
+paper's "dynamic generation instead of stored tables" theme.  See
+ops.encode_bundle(..., dynamic_sobol=True).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_bundle_kernel(x_ref, s_ref, o_ref, *, ht: int):
+    """x (bt, ht) int32, s (ht, dt) int32 -> accumulate o (bt, dt) int32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ge = x_ref[...][:, :, None] >= s_ref[...][None, :, :]  # (bt, ht, dt)
+    contrib = 2 * ge.sum(axis=1, dtype=jnp.int32) - ht
+    o_ref[...] += contrib
+
+
+def encode_bundle_pallas(
+    x_q: jax.Array,
+    sobol_q: jax.Array,
+    *,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Launch the fused encode+bundle kernel.
+
+    Requires B % block_b == H % block_h == D % block_d == 0 (the ops.py
+    wrapper pads and corrects).  Returns (B, D) int32.
+    """
+    b, h = x_q.shape
+    h2, d = sobol_q.shape
+    assert h == h2, (h, h2)
+    assert b % block_b == 0 and h % block_h == 0 and d % block_d == 0
+
+    grid = (b // block_b, d // block_d, h // block_h)
+    return pl.pallas_call(
+        functools.partial(_encode_bundle_kernel, ht=block_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_h), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_h, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.int32),
+        interpret=interpret,
+    )(x_q.astype(jnp.int32), sobol_q.astype(jnp.int32))
+
+
+def _encode_bundle_dyn_kernel(
+    x_ref, dir_ref, o_ref, *, ht: int, block_d: int, shift: int, n_bits: int
+):
+    """Sobol-free variant: thresholds are generated in VMEM from the
+    direction matrix (dir_ref: (ht, n_bits) uint32) via Gray-code XOR.
+    `shift` right-shifts raw 32-bit Sobol integers to quantized levels.
+    """
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Generate the (ht, dt) quantized Sobol tile for points [j*dt, (j+1)*dt).
+    # +1: skip the all-zeros Sobol point (matches sobol_sequence skip=1).
+    idx = (j * block_d + jax.lax.iota(jnp.uint32, block_d)) + jnp.uint32(1)
+    gray = idx ^ (idx >> jnp.uint32(1))
+    acc = jnp.zeros((dir_ref.shape[0], block_d), jnp.uint32)
+    dirs = dir_ref[...]
+    for bit in range(n_bits):
+        mask = ((gray >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.uint32)
+        acc = acc ^ (mask[None, :] * dirs[:, bit : bit + 1])
+    s = (acc >> jnp.uint32(shift)).astype(jnp.int32)
+
+    ge = x_ref[...][:, :, None] >= s[None, :, :]
+    o_ref[...] += 2 * ge.sum(axis=1, dtype=jnp.int32) - ht
+
+
+def encode_bundle_dynamic_pallas(
+    x_q: jax.Array,
+    direction: jax.Array,
+    levels: int,
+    d: int,
+    *,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused encode+bundle with in-kernel Sobol generation.
+
+    x_q: (B, H) int32; direction: (H, n_bits) uint32 direction integers;
+    `d` = hypervector dimensionality (number of Sobol points generated).
+    HBM traffic drops from O(H*D) (threshold table) to O(H*n_bits).
+    """
+    b, h = x_q.shape
+    h2, n_bits = direction.shape
+    assert h == h2
+    assert b % block_b == 0 and h % block_h == 0 and d % block_d == 0
+    shift = 32 - (int(levels).bit_length() - 1)
+
+    grid = (b // block_b, d // block_d, h // block_h)
+    return pl.pallas_call(
+        functools.partial(
+            _encode_bundle_dyn_kernel,
+            ht=block_h,
+            block_d=block_d,
+            shift=shift,
+            n_bits=n_bits,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_h), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_h, n_bits), lambda i, j, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.int32),
+        interpret=interpret,
+    )(x_q.astype(jnp.int32), direction.astype(jnp.uint32))

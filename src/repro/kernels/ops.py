@@ -1,0 +1,209 @@
+"""Jit-ready public wrappers around the Pallas kernels.
+
+Each op pads its operands to the kernel's block grid, launches the
+kernel (interpret=True automatically off-TPU so the whole framework
+runs/validates on CPU), and slices/corrects the result.  Semantics of
+op X match `repro.kernels.ref.X` exactly; tests enforce this across a
+shape/dtype sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import unary
+from repro.kernels import ref
+from repro.kernels.bundle_binarize import bundle_binarize_pallas
+from repro.kernels.encode_bundle import (
+    encode_bundle_dynamic_pallas,
+    encode_bundle_pallas,
+)
+from repro.kernels.encode_unary_mxu import encode_unary_mxu_pallas
+from repro.kernels.hamming_packed import hamming_packed_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (n is padded upstream)."""
+    best = 1
+    for cand in range(1, min(n, target) + 1):
+        if n % cand == 0:
+            best = cand
+    return best
+
+
+def encode_bundle(
+    x_q: jax.Array,
+    sobol_q: jax.Array,
+    *,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused uHD encode+bundle (VPU compare kernel). (B,H),(H,D) -> (B,D)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h = x_q.shape
+    d = sobol_q.shape[-1]
+    bp, hp, dp = _round_up(b, block_b), _round_up(h, block_h), _round_up(d, block_d)
+    # Padded features use intensity -1 (< every threshold): each contributes
+    # exactly -1 per dim, corrected after the kernel.  Padded thresholds use
+    # int32 max so they never flip a compare for padded D columns (sliced).
+    xp = jnp.pad(x_q.astype(jnp.int32), ((0, bp - b), (0, hp - h)), constant_values=-1)
+    sp = jnp.pad(
+        sobol_q.astype(jnp.int32),
+        ((0, hp - h), (0, dp - d)),
+        constant_values=np.iinfo(np.int32).max,
+    )
+    out = encode_bundle_pallas(
+        xp, sp, block_b=block_b, block_h=block_h, block_d=block_d, interpret=interpret
+    )
+    return out[:b, :d] + (hp - h)
+
+
+def encode_bundle_dynamic(
+    x_q: jax.Array,
+    direction: jax.Array,
+    levels: int,
+    d: int,
+    *,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused encode+bundle with in-kernel Sobol generation (no HBM table).
+
+    direction: (H, 32) uint32 direction integers from
+    `sobol.direction_matrix(H)`.  Matches encode_bundle(x_q,
+    quantized_sobol_table) bit-exactly (skip=1 convention).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h = x_q.shape
+    bp, hp, dp = _round_up(b, block_b), _round_up(h, block_h), _round_up(d, block_d)
+    xp = jnp.pad(x_q.astype(jnp.int32), ((0, bp - b), (0, hp - h)), constant_values=-1)
+    # Padded features get zero direction vectors -> threshold 0 -> compare
+    # x >= 0 is False for the pad value -1 -> contributes -1, corrected below.
+    dirp = jnp.pad(direction.astype(jnp.uint32), ((0, hp - h), (0, 0)))
+    out = encode_bundle_dynamic_pallas(
+        xp,
+        dirp,
+        levels,
+        dp,
+        block_b=block_b,
+        block_h=block_h,
+        block_d=block_d,
+        interpret=interpret,
+    )
+    return out[:b, :d] + (hp - h)
+
+
+def encode_unary_mxu(
+    x_q: jax.Array,
+    sobol_q: jax.Array,
+    levels: int,
+    *,
+    block_b: int = 128,
+    block_d: int = 128,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """MXU-unary encode: thermometer/one-hot binary matmul. -> (B, D) int32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h = x_q.shape
+    d = sobol_q.shape[-1]
+    u = unary.to_thermometer(x_q + 1, levels).reshape(b, h * levels)
+    onehot = jax.nn.one_hot(sobol_q, levels, axis=1, dtype=jnp.bfloat16)
+    o = onehot.reshape(h * levels, d)
+    k = h * levels
+    bp, dp, kp = _round_up(b, block_b), _round_up(d, block_d), _round_up(k, block_k)
+    up = jnp.pad(u.astype(jnp.bfloat16), ((0, bp - b), (0, kp - k)))
+    op = jnp.pad(o, ((0, kp - k), (0, dp - d)))
+    out = encode_unary_mxu_pallas(
+        up, op, h, block_b=block_b, block_d=block_d, block_k=block_k, interpret=interpret
+    )
+    return out[:b, :d]
+
+
+def bundle_binarize(
+    hvs: jax.Array,
+    labels: jax.Array,
+    n_classes: int,
+    *,
+    binarize: bool = True,
+    block_c: int = 8,
+    block_d: int = 512,
+    block_b: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Class bundling + concurrent binarization. (B,D),(B,) -> (C,D)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, d = hvs.shape
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32).T  # (C, B)
+    cp, dp, bp = (
+        _round_up(n_classes, block_c),
+        _round_up(d, block_d),
+        _round_up(b, block_b),
+    )
+    # Padded batch rows have zero one-hot weight; padded classes/dims sliced.
+    hp = jnp.pad(hvs.astype(jnp.int32), ((0, bp - b), (0, dp - d)))
+    lp = jnp.pad(onehot, ((0, cp - n_classes), (0, bp - b)))
+    out = bundle_binarize_pallas(
+        hp,
+        lp,
+        binarize=binarize,
+        block_c=block_c,
+        block_d=block_d,
+        block_b=block_b,
+        interpret=interpret,
+    )
+    return out[:n_classes, :d]
+
+
+def hamming_packed(
+    q_words: jax.Array,
+    c_words: jax.Array,
+    d: int,
+    *,
+    block_b: int = 128,
+    block_c: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed ±1 similarity. (B,W),(C,W) uint32 -> (B,C) int32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, w = q_words.shape
+    c = c_words.shape[0]
+    bp, cp = _round_up(b, block_b), _round_up(c, block_c)
+    qp = jnp.pad(q_words, ((0, bp - b), (0, 0)))
+    cpad = jnp.pad(c_words, ((0, cp - c), (0, 0)))
+    out = hamming_packed_pallas(
+        qp, cpad, d, block_b=block_b, block_c=block_c, interpret=interpret
+    )
+    return out[:b, :c]
+
+
+__all__ = [
+    "encode_bundle",
+    "encode_bundle_dynamic",
+    "encode_unary_mxu",
+    "bundle_binarize",
+    "hamming_packed",
+    "ref",
+]

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function defines the exact semantics its kernel must reproduce;
+tests sweep shapes/dtypes and assert allclose (exact for the integer
+kernels) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_bundle(x_q: jax.Array, sobol_q: jax.Array) -> jax.Array:
+    """Fused uHD encode+bundle: hv[b,d] = sum_h (2*[x[b,h] >= S[h,d]] - 1).
+
+    (B, H) int, (H, D) int -> (B, D) int32, values in [-H, H].
+    """
+    h = x_q.shape[-1]
+    ge = x_q[:, :, None].astype(jnp.int32) >= sobol_q[None, :, :].astype(jnp.int32)
+    return (2 * ge.sum(axis=1, dtype=jnp.int32) - h).astype(jnp.int32)
+
+
+def encode_unary_mxu(u: jax.Array, onehot_s: jax.Array, h: int) -> jax.Array:
+    """MXU-unary encode: 2 * (U @ O) - H with binary bf16 operands.
+
+    u: (B, K) thermometer-coded data (K = H * levels), onehot_s: (K, D).
+    Returns (B, D) int32.
+    """
+    count = jnp.dot(
+        u.astype(jnp.float32), onehot_s.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return (2 * count - h).astype(jnp.int32)
+
+
+def bundle_binarize(hvs: jax.Array, onehot_labels: jax.Array) -> jax.Array:
+    """Class bundling with concurrent binarization (paper contribution 5).
+
+    hvs: (B, D) int32 image HVs; onehot_labels: (C, B) {0,1}.
+    Returns (C, D) int8 ±1 = sign of the per-class sum (ties -> +1).
+    """
+    sums = jnp.dot(
+        onehot_labels.astype(jnp.float32), hvs.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.where(sums >= 0, jnp.int8(1), jnp.int8(-1))
+
+
+def hamming_packed(q_words: jax.Array, c_words: jax.Array, d: int) -> jax.Array:
+    """Packed ±1 dot via XOR+popcount: (B, W) x (C, W) -> (B, C) int32.
+
+    score = d - 2 * popcount(q ^ c); assumes padding bits are equal in
+    both operands (the packers zero them).
+    """
+    x = q_words[:, None, :] ^ c_words[None, :, :]
+    pc = jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+    return d - 2 * pc
+
+
+def sobol_tile(direction: jax.Array, d0: jax.Array, tile: int) -> jax.Array:
+    """On-the-fly Sobol integer generation for points [d0, d0+tile).
+
+    direction: (H, NBITS) uint32 direction integers.  Returns (H, tile)
+    uint32 raw Sobol integers: point k = XOR of direction bits of gray(k).
+    """
+    idx = (d0 + jnp.arange(tile)).astype(jnp.uint32)
+    gray = idx ^ (idx >> jnp.uint32(1))
+    n_bits = direction.shape[-1]
+    acc = jnp.zeros((direction.shape[0], tile), jnp.uint32)
+    for b in range(n_bits):
+        mask = ((gray >> jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.uint32)
+        acc = acc ^ (mask[None, :] * direction[:, b : b + 1])
+    return acc

@@ -1,0 +1,149 @@
+"""Abstract input construction for the dry-run: ShapeDtypeStructs with
+NamedShardings for every (architecture x shape) cell — weak-type
+correct, shardable, zero allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import ShardingRules, abstract_params
+from repro.models import transformer
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+Tree = Any
+
+
+def rules_for(cfg: ModelConfig) -> ShardingRules:
+    return ShardingRules(fsdp=cfg.fsdp)
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec(mesh: Mesh, rules: ShardingRules, batch: int, extra_dims: int) -> P:
+    b = rules.batch_axes(mesh)
+    import math
+
+    bsz = math.prod(mesh.shape[a] for a in b) if b else 1
+    lead = (b if len(b) > 1 else b[0]) if (b and batch % bsz == 0) else None
+    return P(lead, *([None] * extra_dims))
+
+
+def batch_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules: ShardingRules
+) -> Tree:
+    """Token/embedding inputs for a train or prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Tree = {
+        "tokens": _sds((b, s), jnp.int32, mesh, _batch_spec(mesh, rules, b, 1))
+    }
+    if cfg.input_mode == "embeddings":
+        out["embeddings"] = _sds(
+            (b, s, cfg.d_model), jnp.bfloat16, mesh, _batch_spec(mesh, rules, b, 2)
+        )
+    if cfg.n_ctx_tokens:
+        out["ctx"] = _sds(
+            (b, cfg.n_ctx_tokens, cfg.d_model),
+            jnp.bfloat16,
+            mesh,
+            _batch_spec(mesh, rules, b, 2),
+        )
+    return out
+
+
+def abstract_decode_state(
+    cfg: ModelConfig, batch: int, s_max: int, mesh: Mesh, rules: ShardingRules
+) -> Tree:
+    """ShapeDtypeStruct tree for the decode state, sharded per the rules."""
+    shapes = jax.eval_shape(
+        functools.partial(transformer.init_decode_state, cfg, batch, s_max)
+    )
+    axes = transformer.decode_state_axes(cfg)
+
+    def attach(sds, ax):
+        spec = rules.param_spec(tuple(sds.shape), tuple(ax), mesh)
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        )
+
+    return jax.tree.map(
+        attach, shapes, axes, is_leaf=lambda x: isinstance(x, tuple) and not x
+    )
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules) -> Tree:
+    """fp32 AdamW moments: param shardings + ZeRO-1 (forced FSDP over data)."""
+    import dataclasses
+
+    from repro.models import params as pmod
+
+    zrules = dataclasses.replace(rules, fsdp=True, fsdp_min_bytes=1 << 20)
+
+    def walk(spec_tree):
+        out = {}
+        for k, v in spec_tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = jax.ShapeDtypeStruct(
+                    v.shape,
+                    jnp.float32,
+                    sharding=zrules.param_sharding(v.shape, v.axes, mesh),
+                )
+        return out
+
+    moments = walk(pmod.param_specs(cfg))
+    return {"m": moments, "v": jax.tree.map(lambda x: x, moments)}
+
+
+def input_specs(
+    arch: str, shape_name: str, mesh: Mesh
+) -> tuple[ModelConfig, ShapeConfig, ShardingRules, Tree]:
+    """All abstract inputs needed to lower one (arch x shape) cell."""
+    return input_specs_for(get_config(arch), shape_name, mesh)
+
+
+def input_specs_for(
+    cfg: ModelConfig, shape_name: str, mesh: Mesh
+) -> tuple[ModelConfig, ShapeConfig, ShardingRules, Tree]:
+    """Abstract inputs for an explicit config (perf-iteration variants).
+
+    Returns (cfg, shape, rules, inputs) where inputs holds, per kind:
+      train:   params (fp32), opt_state, batch, step
+      prefill: params (bf16), batch
+      decode:  params (bf16), state, tokens
+    """
+    shape = SHAPES[shape_name]
+    rules = rules_for(cfg)
+    if shape.kind == "train":
+        inputs = {
+            "params": abstract_params(cfg, mesh, rules),
+            "opt_state": abstract_opt_state(cfg, mesh, rules),
+            "batch": batch_specs(cfg, shape, mesh, rules),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        inputs = {
+            "params": abstract_params(cfg, mesh, rules, dtype=jnp.bfloat16),
+            "batch": batch_specs(cfg, shape, mesh, rules),
+        }
+    else:  # decode
+        b = shape.global_batch
+        inputs = {
+            "params": abstract_params(cfg, mesh, rules, dtype=jnp.bfloat16),
+            "state": abstract_decode_state(cfg, b, shape.seq_len, mesh, rules),
+            "tokens": _sds((b, 1), jnp.int32, mesh, _batch_spec(mesh, rules, b, 1)),
+        }
+        if cfg.input_mode == "embeddings":
+            inputs["embeddings"] = _sds(
+                (b, 1, cfg.d_model), jnp.bfloat16, mesh, _batch_spec(mesh, rules, b, 2)
+            )
+    return cfg, shape, rules, inputs

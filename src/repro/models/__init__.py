@@ -1,0 +1,1 @@
+"""LM model stack for the assigned architectures (pure-JAX, pjit-ready)."""

@@ -1,0 +1,286 @@
+"""GQA attention: global / sliding-window / cross, train + prefill + decode.
+
+Decode uses a KV cache; "local" mixers use a *rolling* cache of
+window_size slots (slot = pos % window), which bounds long-context KV
+memory — this is what makes gemma3-12b's 5:1 local:global pattern
+runnable at 500k context (only the global layers hold full-length KV).
+RoPE is applied before caching, so rolled slots keep absolute phases.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.0**30
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, kv_src: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", kv_src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", kv_src, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _gqa_scores(cfg: ModelConfig, q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,T,nq,hd), k: (B,S,nkv,hd) -> (B,nkv,g,T,S) fp32 logits.
+
+    fp32 accumulation via preferred_element_type — never casts the (big,
+    possibly cached) k operand to fp32 in HBM.
+    """
+    b, t, nq, hd = q.shape
+    g = cfg.q_per_kv
+    qg = q.reshape(b, t, cfg.n_kv_heads, g, hd)
+    scores = jnp.einsum(
+        "btngh,bsnh->bngts", qg, k, preferred_element_type=jnp.float32
+    )
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    return layers.softcap(scores, cfg.attn_softcap)
+
+
+def _attend(cfg: ModelConfig, q, k, v, mask) -> jax.Array:
+    """mask: broadcastable to (B, nkv, g, T, S) bool (True = visible)."""
+    scores = _gqa_scores(cfg, q, k)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    b, t = q.shape[0], q.shape[1]
+    out = jnp.einsum("bngts,bsnh->btngh", probs.astype(v.dtype), v)
+    return out.reshape(b, t, cfg.n_heads, cfg.head_dim)
+
+
+def _causal_mask(t: int, s: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = i >= j
+    if window:
+        m &= (i - j) < window
+    return m  # (T, S)
+
+
+def _attend_blocked(
+    cfg: ModelConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+) -> jax.Array:
+    """Flash-style blocked attention with online softmax (pure jnp).
+
+    Structure: an outer sweep over *query* blocks (independent — the
+    scan carries nothing, so its backward stores no growing state) with
+    an inner static Python loop over KV blocks doing the online-softmax
+    update in registers.  Transient memory is O(bq * bkv) scores per
+    step instead of O(T * S) — this is what makes prefill_32k fit HBM.
+
+    With cfg.unroll_loops both sweeps are static Python loops and
+    causally dead (q_blk, kv_blk) pairs are *skipped*, giving exact
+    causal FLOP counts for the roofline pass (the scan version computes
+    all pairs and masks — ~2x causal overcompute, compile-time only).
+    """
+    b, t, nq, hd = q.shape
+    s = k.shape[1]
+    nkv, g = cfg.n_kv_heads, cfg.q_per_kv
+    bq = min(cfg.attn_block_q, t)
+    bkv = min(cfg.attn_block_kv, s)
+    assert t % bq == 0 and s % bkv == 0, (t, bq, s, bkv)
+    nqb, nkb = t // bq, s // bkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qs = q.reshape(b, nqb, bq, nkv, g, hd)
+
+    def one_q_block(q_blk, qb_idx, kv_range):
+        """q_blk (B, bq, nkv, g, hd); qb_idx traced or static scalar."""
+        q_pos = qb_idx * bq + jnp.arange(bq)
+        acc = jnp.zeros((b, bq, nkv, g, hd), jnp.float32)
+        m = jnp.full((b, bq, nkv, g), -jnp.inf, jnp.float32)
+        l = jnp.zeros((b, bq, nkv, g), jnp.float32)
+        for kb in kv_range:
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kb * bkv, bkv, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kb * bkv, bkv, 1)
+            kv_pos = kb * bkv + jnp.arange(bkv)
+            scores = jnp.einsum(
+                "btngh,bsnh->btngs", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            )  # (B, bq, nkv, g, bkv)
+            scores = layers.softcap(scores * scale, cfg.attn_softcap)
+            mask = jnp.ones((bq, bkv), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+            scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+            m_new = jnp.maximum(m, scores.max(-1))
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "btngs,bsnh->btngh", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            m = m_new
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    if cfg.unroll_loops:
+        outs = []
+        for qb_idx in range(nqb):
+            q_end = (qb_idx + 1) * bq
+            kv_range = []
+            for kb in range(nkb):
+                kv_start, kv_end = kb * bkv, (kb + 1) * bkv
+                if causal and kv_start >= q_end:
+                    continue  # entirely in the future
+                if window and kv_end <= qb_idx * bq - window:
+                    continue  # entirely beyond the window
+                kv_range.append(kb)
+            outs.append(one_q_block(qs[:, qb_idx], qb_idx, kv_range))
+        out = jnp.stack(outs, axis=1)
+    else:
+        body = lambda _, xs: (None, one_q_block(xs[0], xs[1], range(nkb)))
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        _, out_blocks = jax.lax.scan(
+            body, None, (jnp.moveaxis(qs, 1, 0), jnp.arange(nqb))
+        )
+        out = jnp.moveaxis(out_blocks, 0, 1)
+
+    return out.reshape(b, t, nq, hd).astype(v.dtype)
+
+
+def _out_proj(p: dict, attn_out: jax.Array, dtype) -> jax.Array:
+    return jnp.einsum("btnh,nhd->btd", attn_out, p["wo"].astype(dtype))
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    local: bool,
+    mode: str,
+    cache: dict | None = None,
+    pos: jax.Array | None = None,
+    max_len: int = 0,
+) -> tuple[jax.Array, dict | None]:
+    """Self-attention in all three modes.
+
+    train:   full sequence, causal (+window) mask, no cache.
+    prefill: like train but returns a cache sized for decode.
+    decode:  x is (B, 1, D); cache holds (B, S_cache, nkv, hd); `pos` is
+             the absolute position of the new token.
+    """
+    dt = x.dtype
+    base = cfg.rope_base if local or cfg.rope_base_global is None else cfg.rope_base_global
+    window = cfg.window_size if local else 0
+
+    if mode in ("train", "prefill"):
+        q, k, v = _project_qkv(cfg, p, x, x)
+        if cfg.use_rope:
+            q = layers.rope(q, positions, base)
+            k = layers.rope(k, positions, base)
+        t = x.shape[1]
+        if t >= cfg.attn_block_threshold and t % cfg.attn_block_q == 0:
+            out = _attend_blocked(cfg, q, k, v, causal=True, window=window)
+        else:
+            mask = _causal_mask(t, t, window)[None, None, None]
+            out = _attend(cfg, q, k, v, mask)
+        y = _out_proj(p, out, dt)
+        if mode == "train":
+            return y, None
+        # Decode cache.  Local layers keep a rolling window: slot of
+        # absolute position p is p % window; for t >= window, slot s
+        # holds position t - window + ((s - t) % window).
+        if window and t >= window:
+            s_idx = jnp.arange(window)
+            src = t - window + ((s_idx - t) % window)
+            k_c, v_c = k[:, src], v[:, src]
+        elif window and t < window:
+            pad = ((0, 0), (0, window - t), (0, 0), (0, 0))
+            k_c, v_c = jnp.pad(k, pad), jnp.pad(v, pad)
+        else:
+            k_c, v_c = k, v
+        if not window and max_len > k_c.shape[1]:
+            # pad to the decode budget: decode writes at pos >= t, and
+            # an out-of-range .at[].set silently clamps (corruption)
+            pad = ((0, 0), (0, max_len - k_c.shape[1]), (0, 0), (0, 0))
+            k_c, v_c = jnp.pad(k_c, pad), jnp.pad(v_c, pad)
+        return y, {"k": k_c, "v": v_c}
+
+    assert cache is not None and pos is not None
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    if cfg.use_rope:
+        pos_b = jnp.reshape(pos, (1, 1))  # (1, T=1), broadcasts over batch
+        q = layers.rope(q, pos_b, base)
+        k_new = layers.rope(k_new, pos_b, base)
+    s_cache = cache["k"].shape[1]
+    slot = (pos % window) if window else pos
+    k = cache["k"].at[:, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[:, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    j = jnp.arange(s_cache)
+    if window:
+        valid = j < jnp.minimum(pos + 1, window)  # filled rolling slots
+    else:
+        valid = j <= pos
+    mask = valid[None, None, None, None, :]
+    out = _attend(cfg, q, k.astype(dt), v.astype(dt), mask)
+    return _out_proj(p, out, dt), {"k": k, "v": v}
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    mode: str,
+    ctx: jax.Array | None = None,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Cross-attention to a fixed context (stub image/frame embeddings).
+
+    No RoPE, no causal mask.  prefill computes and caches the context
+    K/V; decode reuses them unchanged.
+    """
+    dt = x.dtype
+    if mode in ("train", "prefill"):
+        assert ctx is not None
+        q, k, v = _project_qkv(cfg, p, x, ctx.astype(dt))
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    else:
+        assert cache is not None
+        q = jnp.einsum("btd,dnh->btnh", x, p["wq"].astype(dt))
+        if cfg.qk_norm:
+            q = layers.rms_norm(q, p["q_norm"])
+        k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+        new_cache = cache
+    t = q.shape[1]
+    if t >= cfg.attn_block_threshold and t % cfg.attn_block_q == 0:
+        out = _attend_blocked(cfg, q, k, v, causal=False)
+    else:
+        mask = jnp.ones((1, 1, 1, 1, 1), bool)
+        out = _attend(cfg, q, k, v, mask)
+    y = _out_proj(p, out, dt)
+    gate = jnp.tanh(p["gate"].astype(jnp.float32)).astype(dt)
+    return y * gate, new_cache
+
+
+def init_self_cache(
+    cfg: ModelConfig, batch: int, s_max: int, *, local: bool, dtype
+) -> dict[str, Any]:
+    s = min(s_max, cfg.window_size) if (local and cfg.window_size) else s_max
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cross_cache(cfg: ModelConfig, batch: int, dtype) -> dict[str, Any]:
+    shape = (batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

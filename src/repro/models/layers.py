@@ -1,0 +1,58 @@
+"""Shared neural-net primitives (pure functions, bf16-compute/fp32-param)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, base: float = 10_000.0
+) -> jax.Array:
+    """Rotary embedding. x: (..., T, H, hd); positions: broadcastable (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def ffn(params: dict, x: jax.Array, act: str, dtype) -> jax.Array:
+    """Dense FFN: swiglu / geglu / gelu."""
+    w_up = params["w_up"].astype(dtype)
+    up = x @ w_up
+    if act in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"].astype(dtype)
+        hidden = (jax.nn.silu(gate) if act == "swiglu" else gelu(gate)) * up
+    else:
+        hidden = gelu(up)
+    return hidden @ params["w_down"].astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal positional embeddings (musicgen backbone)."""
+    half = d // 2
+    freq = 10_000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent mixer (Griffin / RecurrentGemma).
+
+Block structure (De et al., arXiv:2402.19427):
+    x -> [linear -> causal depthwise conv(4) -> RG-LRU] (.) [linear -> gelu]
+      -> linear out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_r xc_t + b_r)          recurrence gate
+    i_t = sigmoid(W_i xc_t + b_i)          input gate
+    log a_t = -c * softplus(lam) * r_t     (a = sigmoid(lam)^(c*r)), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xc_t)
+
+Train/prefill runs the recurrence with an associative scan over the
+sequence (O(log T) depth); decode is a single fused step.  State per
+layer is just (B, W) — constant in sequence length, which is why the
+hybrid runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+_C = 8.0  # Griffin's fixed gate exponent
+
+
+def _conv_causal(p: dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width cw.  x: (B, T, W)."""
+    cw = p["conv_w"].shape[0]
+    dt = x.dtype
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shift = cw - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * p["conv_w"][i].astype(dt)
+    return out + p["conv_b"].astype(dt)
+
+
+def _lru_coeffs(p: dict, xc: jax.Array):
+    """Gate math in fp32; returns (a, b) with h_t = a_t h + b_t."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_rx"].astype(jnp.float32) + p["b_rx"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_ix"].astype(jnp.float32) + p["b_ix"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(p: dict, xc: jax.Array, h0: jax.Array | None = None):
+    """Associative-scan the linear recurrence over seq. xc: (B, T, W).
+
+    Returns (y (B,T,W) fp32, h_last (B,W) fp32)."""
+    a, b = _lru_coeffs(p, xc)
+    if h0 is not None:
+        # Fold the carried state into the first step: h_1 = a_1 h0 + b_1.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(p: dict, xc: jax.Array, h: jax.Array):
+    """One decode step. xc: (B, 1, W); h: (B, W) fp32."""
+    a, b = _lru_coeffs(p, xc)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None], h_new
+
+
+def recurrent_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    mode: str,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """The full Griffin recurrent mixer.  state = {"h": (B,W), "conv": (B,cw-1,W)}."""
+    dt = x.dtype
+    cw = cfg.conv_width
+    xr = x @ p["w_in"].astype(dt)  # (B, T, W)
+    gate = jax.nn.gelu(x @ p["w_gate_in"].astype(dt), approximate=True)
+
+    if mode in ("train", "prefill"):
+        xc = _conv_causal(p, xr)
+        h0 = None
+        y, h_last = rglru_scan(p, xc, h0)
+        out = (y.astype(dt) * gate) @ p["w_out"].astype(dt)
+        if mode == "train":
+            return out, None
+        t = xr.shape[1]
+        tail = xr[:, max(t - (cw - 1), 0) :]
+        if tail.shape[1] < cw - 1:
+            tail = jnp.pad(tail, ((0, 0), (cw - 1 - tail.shape[1], 0), (0, 0)))
+        return out, {"h": h_last, "conv": tail}
+
+    assert state is not None
+    # decode: conv over the (cw-1) carried inputs + the new one
+    hist = jnp.concatenate([state["conv"].astype(dt), xr], axis=1)  # (B, cw, W)
+    xc = (
+        jnp.einsum("bcw,cw->bw", hist, p["conv_w"].astype(dt)) + p["conv_b"].astype(dt)
+    )[:, None]
+    y, h_new = rglru_step(p, xc, state["h"])
+    out = (y.astype(dt) * gate) @ p["w_out"].astype(dt)
+    return out, {"h": h_new, "conv": hist[:, 1:]}
+
+
+def init_rec_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w, cw = cfg.rec_dim, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, w), dtype),
+    }

@@ -1,0 +1,401 @@
+"""Model assembly: block dispatch, scan-over-layer-groups, loss, serving.
+
+Three entry points, all pure functions of (config, params, ...):
+
+  * loss_fn(cfg, params, batch)          -> scalar loss, metrics
+  * prefill(cfg, params, batch)          -> last-token logits, decode state
+  * decode_step(cfg, params, state, tok) -> logits, new state
+
+Layer stacks run under lax.scan over homogeneous *groups* (one pattern
+period each; params stacked on a leading axis), with jax.checkpoint
+around the group body when cfg.remat — compile time and HLO size are
+O(1) in depth.  A non-dividing remainder runs unscanned ("tail").
+
+Decode state is {"pos": scalar, "blocks": stacked per-group caches,
+"tail": [...]} — attention KV caches (rolling for local layers),
+RG-LRU/xLSTM recurrent states, cross-attention context KV.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain
+from repro.models import attention, layers, recurrent, xlstm
+from repro.models.config import ModelConfig
+
+Tree = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+
+def apply_block(
+    cfg: ModelConfig,
+    kind: str,
+    p: Tree,
+    x: jax.Array,
+    *,
+    mode: str,
+    positions: jax.Array | None = None,
+    ctx: jax.Array | None = None,
+    cache: Tree | None = None,
+    pos: jax.Array | None = None,
+    max_len: int = 0,
+) -> tuple[jax.Array, Tree | None]:
+    """One residual block: mixer (+ cache) then FFN.  Returns (x, new_cache)."""
+    h = layers.rms_norm(x, p["pre_norm"])
+    mixer_cache = cache.get("mixer") if cache else None
+
+    if kind in ("attn", "local"):
+        y, new_mc = attention.self_attention(
+            cfg, p["mixer"], h, positions, local=(kind == "local"), mode=mode,
+            cache=mixer_cache, pos=pos, max_len=max_len,
+        )
+    elif kind == "cross":
+        y, new_mc = attention.cross_attention(
+            cfg, p["mixer"], h, mode=mode, ctx=ctx, cache=mixer_cache
+        )
+    elif kind == "rec":
+        y, new_mc = recurrent.recurrent_block(
+            cfg, p["mixer"], h, mode=mode, state=mixer_cache
+        )
+    elif kind == "mlstm":
+        if mode == "decode":
+            y, new_mc = xlstm.mlstm_step(cfg, p["mixer"], h, mixer_cache)
+        else:
+            y, new_mc = xlstm.mlstm_chunkwise(
+                cfg, p["mixer"], h, None, return_state=(mode == "prefill")
+            )
+    elif kind == "slstm":
+        y, new_mc = xlstm.slstm_block(
+            cfg, p["mixer"], h, mixer_cache, mode=mode
+        )
+    else:  # pragma: no cover
+        raise ValueError(f"unknown mixer kind {kind!r}")
+
+    x = x + y
+    x = constrain(x, P(("pod", "data"), None, None))
+
+    aux = jnp.float32(0.0)
+    if cfg.ffn_kind == "dense" and cfg.d_ff > 0:
+        h2 = layers.rms_norm(x, p["ffn_norm"])
+        x = x + layers.ffn(p["ffn"], h2, cfg.act, x.dtype)
+    elif cfg.ffn_kind == "moe":
+        from repro.models import moe  # local import keeps cold path cheap
+
+        h2 = layers.rms_norm(x, p["ffn_norm"])
+        y2, aux = moe.moe_ffn(cfg, p["moe"], h2)
+        x = x + y2
+    x = constrain(x, P(("pod", "data"), None, None))
+    new_cache = None if new_mc is None and mode == "train" else {"mixer": new_mc}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# The stack (scan over groups + tail)
+# ---------------------------------------------------------------------------
+
+
+def _block_fn(cfg: ModelConfig, kind: str, mode: str, positions, ctx, pos,
+              max_len: int = 0):
+    """One (optionally rematerialized) block as f(bparams, x, cache).
+
+    Remat is applied PER LAYER: the backward recompute of a layer only
+    holds that layer's residuals.  (Group-granularity remat was measured
+    to hold a whole period's residuals at once — 80+ GiB for the 90B VLM.)
+    positions/ctx/pos are loop-invariant and closure-captured so the
+    layer scan's backward does not save per-step copies.
+    """
+
+    def f(bparams, x, cache):
+        return apply_block(
+            cfg, kind, bparams, x,
+            mode=mode, positions=positions, ctx=ctx, cache=cache, pos=pos,
+            max_len=max_len,
+        )
+
+    if not cfg.remat:
+        return f
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat_policy == "dots"
+        else jax.checkpoint_policies.nothing_saveable
+    )
+    return jax.checkpoint(f, policy=policy, prevent_cse=False)
+
+
+def _group_body(cfg: ModelConfig, mode: str, positions, ctx, pos, max_len=0):
+    """Returns f(carry, xs) applying one period of blocks."""
+    fns = [
+        _block_fn(cfg, kind, mode, positions, ctx, pos, max_len)
+        for kind in cfg.layer_pattern
+    ]
+
+    def body(carry, xs):
+        x, aux = carry
+        gparams, gcache = xs
+        new_caches = {}
+        for i, fn in enumerate(fns):
+            sub = f"sub{i}"
+            x, nc, a = fn(gparams[sub], x, (gcache or {}).get(sub))
+            new_caches[sub] = nc
+            aux = aux + a
+        return (x, aux), new_caches
+
+    return body
+
+
+def run_stack(
+    cfg: ModelConfig,
+    params: Tree,
+    x: jax.Array,
+    *,
+    mode: str,
+    positions: jax.Array | None,
+    ctx: jax.Array | None,
+    caches: Tree | None = None,
+    pos: jax.Array | None = None,
+    max_len: int = 0,
+) -> tuple[jax.Array, Tree | None, jax.Array]:
+    """Apply all layers.  Returns (x, new_caches, aux_loss)."""
+    aux = jnp.float32(0.0)
+    with_cache = mode != "train"
+    body = _group_body(cfg, mode, positions, ctx, pos, max_len)
+
+    new_caches: Tree = {}
+    if cfg.n_groups > 0 and cfg.scan_layers:
+        group_caches = caches["blocks"] if caches else None
+        xs = (params["blocks"], group_caches)
+        (x, aux), stacked = jax.lax.scan(body, (x, aux), xs)
+        if with_cache:
+            new_caches["blocks"] = stacked
+    tail_caches = []
+    for i, kind in enumerate(cfg.tail_pattern):
+        tp = params["tail"][f"layer{i}"]
+        tc = caches["tail"][i] if caches else None
+        fn = _block_fn(cfg, kind, mode, positions, ctx, pos, max_len)
+        x, nc, a = fn(tp, x, tc)
+        aux = aux + a
+        tail_caches.append(nc)
+    if with_cache:
+        new_caches["tail"] = tail_caches
+    return x, (new_caches if with_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding in / logits out
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params: Tree, batch: Tree, positions) -> jax.Array:
+    dt = cfg.cdtype()
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(dt)
+        # stub modality frontend supplies frame/patch embeddings; add
+        # sinusoidal positions (musicgen backbone convention)
+        x = x + layers.sinusoidal_positions(positions, cfg.d_model).astype(dt)
+    else:
+        emb = params["embed"]
+        x = emb[batch["tokens"]].astype(dt)
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(dt)
+    return constrain(x, P(("pod", "data"), None, None))
+
+
+def unembed(cfg: ModelConfig, params: Tree, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["unembed"]
+    logits = x @ w.astype(x.dtype)
+    logits = layers.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return constrain(logits, P(("pod", "data"), None, "model"))
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=(0,))
+def _ce_chunk(cfg, params, h, labels, mask):
+    """CE over one sequence chunk.  checkpointed: the (B, L, V) logits and
+    the one-hot residual are recomputed in backward instead of being
+    saved once per chunk."""
+    logits = unembed(cfg, params, h)  # (B, L, V) fp32, vocab-sharded
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot einsum, NOT take_along_axis: a gather across the sharded
+    # vocab axis would all-gather the full logits; the einsum reduces
+    # locally and psums a (B, L) scalar field instead.
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=logits.dtype)
+    gold = jnp.einsum("blv,blv->bl", logits, onehot)
+    ce = (logz - gold) * mask
+    return ce.sum(), mask.sum()
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: Tree) -> tuple[jax.Array, Tree]:
+    """Causal LM loss.  batch: {"tokens": (B, S)} (+"embeddings"/"ctx")."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    x = embed_inputs(cfg, params, batch, positions)
+    ctx = batch.get("ctx")
+    if ctx is not None:
+        ctx = ctx.astype(cfg.cdtype())
+    x, _, aux = run_stack(
+        cfg, params, x, mode="train", positions=positions, ctx=ctx
+    )
+    x = layers.rms_norm(x, params["final_norm"])
+
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)], axis=1
+    )
+    n_chunks = max(1, cfg.loss_seq_chunks)
+    if n_chunks > 1 and s % n_chunks == 0:
+        # Static Python loop (not fori_loop): XLA reuses the chunk buffers
+        # so peak logits memory is (B, S/n, V), while the HLO keeps the
+        # full FLOP count visible to cost_analysis (a fori_loop body is
+        # counted once — see DESIGN.md roofline notes).
+        l = s // n_chunks
+        tot, cnt = jnp.float32(0), jnp.float32(0)
+        for i in range(n_chunks):
+            t, c = _ce_chunk(
+                cfg, params,
+                jax.lax.dynamic_slice_in_dim(x, i * l, l, 1),
+                jax.lax.dynamic_slice_in_dim(labels, i * l, l, 1),
+                jax.lax.dynamic_slice_in_dim(mask, i * l, l, 1),
+            )
+            tot, cnt = tot + t, cnt + c
+    else:
+        tot, cnt = _ce_chunk(cfg, params, x, labels, mask)
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, s_max: int, dtype=None
+) -> Tree:
+    """Allocate the full decode state for a batch and max context length."""
+    dt = dtype or cfg.cdtype()
+
+    def one(kind: str) -> Tree:
+        if kind in ("attn", "local"):
+            return {"mixer": attention.init_self_cache(
+                cfg, batch, s_max, local=(kind == "local"), dtype=dt)}
+        if kind == "cross":
+            return {"mixer": attention.init_cross_cache(cfg, batch, dt)}
+        if kind == "rec":
+            return {"mixer": recurrent.init_rec_state(cfg, batch, dt)}
+        if kind == "mlstm":
+            return {"mixer": xlstm.init_mlstm_state(cfg, batch)}
+        if kind == "slstm":
+            return {"mixer": xlstm.init_slstm_state(cfg, batch)}
+        raise ValueError(kind)
+
+    group = {f"sub{i}": one(k) for i, k in enumerate(cfg.layer_pattern)}
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_groups, *a.shape)), group
+    ) if cfg.n_groups else {}
+    tail = [one(k) for k in cfg.tail_pattern]
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "blocks": stacked,
+        "tail": tail,
+    }
+
+
+def decode_state_axes(cfg: ModelConfig) -> Tree:
+    """Logical sharding axes mirroring init_decode_state's tree structure.
+
+    Kept adjacent to init_decode_state; tests assert the two trees match.
+    """
+
+    def one(kind: str) -> Tree:
+        if kind in ("attn", "local", "cross"):
+            kv = ("batch", None, "kv_heads", "head_dim")
+            return {"mixer": {"k": kv, "v": kv}}
+        if kind == "rec":
+            return {"mixer": {"h": ("batch", "rec"), "conv": ("batch", None, "rec")}}
+        if kind == "mlstm":
+            return {"mixer": {
+                "c": ("batch", "heads", "head_dim", "head_dim2"),
+                "n": ("batch", "heads", "head_dim"),
+                "m": ("batch", "heads"),
+            }}
+        if kind == "slstm":
+            s = ("batch", "heads", "head_dim")
+            return {"mixer": {"c": s, "n": s, "m": s, "h": s}}
+        raise ValueError(kind)
+
+    group = {f"sub{i}": one(k) for i, k in enumerate(cfg.layer_pattern)}
+    stacked = jax.tree.map(
+        lambda a: ("layers", *a), group, is_leaf=lambda x: isinstance(x, tuple)
+    ) if cfg.n_groups else {}
+    return {
+        "pos": (),
+        "blocks": stacked,
+        "tail": [one(k) for k in cfg.tail_pattern],
+    }
+
+
+def prefill(
+    cfg: ModelConfig, params: Tree, batch: Tree, max_len: int | None = None
+) -> tuple[jax.Array, Tree]:
+    """Process the prompt; returns (last-token logits (B, V), decode state).
+
+    `max_len` is the decode budget: global-attention KV caches are
+    padded to it (default prompt + 128)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if max_len is None:
+        max_len = s + 128
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    x = embed_inputs(cfg, params, batch, positions)
+    ctx = batch.get("ctx")
+    if ctx is not None:
+        ctx = ctx.astype(cfg.cdtype())
+    x, caches, _ = run_stack(
+        cfg, params, x, mode="prefill", positions=positions, ctx=ctx,
+        max_len=max_len,
+    )
+    x = layers.rms_norm(x, params["final_norm"])
+    logits = unembed(cfg, params, x[:, -1:])[:, 0]
+    caches["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, caches
+
+
+def decode_step(
+    cfg: ModelConfig, params: Tree, state: Tree, tokens: jax.Array, **extra
+) -> tuple[jax.Array, Tree]:
+    """One serving step: tokens (B, 1) -> logits (B, V), updated state."""
+    pos = state["pos"]
+    positions = pos[None, None]
+    batch = {"tokens": tokens, **extra}
+    x = embed_inputs(cfg, params, batch, positions)
+    x, caches, _ = run_stack(
+        cfg, params, x, mode="decode", positions=positions,
+        ctx=None, caches=state, pos=pos,
+    )
+    x = layers.rms_norm(x, params["final_norm"])
+    logits = unembed(cfg, params, x)[:, 0]
+    caches["pos"] = pos + 1
+    return logits, caches

@@ -1,0 +1,259 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence)  — Beck et al., arXiv:2405.04517.
+
+mLSTM stabilized semantics (per head; stored state is m-stabilized):
+    m_t = max(log f_t + m_{t-1}, itil_t)
+    C_t = e^{log f_t + m_{t-1} - m_t} C_{t-1} + e^{itil_t - m_t} k_t v_t^T
+    n_t = e^{log f_t + m_{t-1} - m_t} n_{t-1} + e^{itil_t - m_t} k_t
+    h_t = (q_t^T C_t) / max(|q_t . n_t|, e^{-m_t})
+
+Training/prefill uses the chunkwise-parallel form: lax.scan over chunks
+of `chunk_size` carrying (C, n, m); intra-chunk terms form a (L, L)
+decay-masked attention matrix.  `mlstm_step` is the exact stepwise
+recurrence; tests assert the chunkwise form matches it.
+
+sLSTM has true hidden-to-gate recurrence (R h_{t-1}) and cannot be
+parallelized over time — a lax.scan over steps, O(T) depth, O(1) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_qkvif(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (B, T, D) -> q,k,v (B,T,nh,hd) fp32; itil,logf (B,T,nh) fp32; o gate; inner."""
+    dt = x.dtype
+    inner = x @ p["w_in"].astype(dt)  # (B, T, inner)
+    innf = inner.astype(jnp.float32)
+    q = jnp.einsum("bti,inh->btnh", innf, p["w_q"].astype(jnp.float32))
+    k = jnp.einsum("bti,inh->btnh", innf, p["w_k"].astype(jnp.float32))
+    v = jnp.einsum("bti,inh->btnh", innf, p["w_v"].astype(jnp.float32))
+    hd = q.shape[-1]
+    q = q / jnp.sqrt(jnp.float32(hd))
+    itil = innf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32)
+    ftil = innf @ p["w_f"].astype(jnp.float32) + p["b_f"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(ftil)  # (B, T, nh)
+    o = jax.nn.sigmoid(inner @ p["w_o"].astype(dt))  # (B, T, inner)
+    return q, k, v, itil, logf, o, inner
+
+
+def _mlstm_out(cfg: ModelConfig, p: dict, h: jax.Array, o: jax.Array, dt):
+    """h: (B,T,nh,hd) fp32 -> output (B,T,D)."""
+    b, t, nh, hd = h.shape
+    h = layers.rms_norm(h, p["h_norm"])  # per-head norm
+    h = (h.reshape(b, t, nh * hd).astype(dt)) * o
+    return h @ p["w_down"].astype(dt)
+
+
+def mlstm_chunkwise(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    state: dict | None = None,
+    *,
+    return_state: bool,
+):
+    """Chunkwise-parallel mLSTM. x: (B, T, D); T % chunk == 0 (padded upstream)."""
+    dt = x.dtype
+    q, k, v, itil, logf, o, _ = _mlstm_qkvif(cfg, p, x)
+    b, t, nh, hd = q.shape
+    ck = min(cfg.chunk_size, t)
+    if t % ck:  # fall back to the largest divisor (odd test lengths)
+        ck = max(c for c in range(1, ck + 1) if t % c == 0)
+    n_chunks = t // ck
+
+    def to_chunks(a):  # (B, T, ...) -> (n_chunks, B, ck, ...)
+        return jnp.moveaxis(a.reshape(b, n_chunks, ck, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(itil), to_chunks(logf)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qj, kj, vj, ij, fj = inp  # (B, ck, nh, ...)
+        fcum = jnp.cumsum(fj, axis=1)  # F_j inclusive, (B, ck, nh)
+        ftot = fcum[:, -1]  # (B, nh)
+
+        # intra-chunk log weights: Dmat[j,s] = F_j - F_s + itil_s for s<=j
+        dmat = (
+            fcum.transpose(0, 2, 1)[:, :, :, None]  # (B,nh,ck,1) F_j
+            - fcum.transpose(0, 2, 1)[:, :, None, :]  # F_s
+            + ij.transpose(0, 2, 1)[:, :, None, :]  # itil_s
+        )
+        causal = jnp.tril(jnp.ones((ck, ck), bool))
+        dmat = jnp.where(causal[None, None], dmat, NEG_INF)
+
+        m_intra = dmat.max(-1)  # (B, nh, ck)
+        m_inter = m_prev[:, :, None] + fcum.transpose(0, 2, 1)  # (B, nh, ck)
+        m_j = jnp.maximum(m_inter, m_intra)
+
+        # intra attention
+        s_w = jnp.exp(dmat - m_j[..., None])  # (B, nh, ck, ck)
+        qk = jnp.einsum("bjnh,bsnh->bnjs", qj, kj)
+        attn = s_w * qk
+        h_intra = jnp.einsum("bnjs,bsnh->bjnh", attn, vj)
+
+        # inter (carried state) contribution
+        w_inter = jnp.exp(m_inter - m_j)  # (B, nh, ck)
+        qC = jnp.einsum("bjnh,bnhg->bjng", qj, c_prev)
+        h_inter = qC * w_inter.transpose(0, 2, 1)[..., None]
+
+        # normalizer
+        norm = (
+            jnp.einsum("bjnh,bnh->bjn", qj, n_prev) * w_inter.transpose(0, 2, 1)
+            + jnp.einsum("bnjs,bsnh,bjnh->bjn", s_w, kj, qj)
+        )
+        denom = jnp.maximum(jnp.abs(norm), jnp.exp(-m_j).transpose(0, 2, 1))
+        h = (h_intra + h_inter) / denom[..., None]
+
+        # chunk-end state update
+        # decay of each in-chunk position to chunk end: G_s = F_L - F_s + itil_s
+        g = ftot[:, None, :] - fcum + ij  # (B, ck, nh)
+        m_end = jnp.maximum(m_prev + ftot, g.max(1))
+        w_old = jnp.exp(m_prev + ftot - m_end)  # (B, nh)
+        w_new = jnp.exp(g - m_end[:, None, :])  # (B, ck, nh)
+        c_new = c_prev * w_old[..., None, None] + jnp.einsum(
+            "bsnh,bsng,bsn->bnhg", kj, vj, w_new
+        )
+        n_new = n_prev * w_old[..., None] + jnp.einsum("bsnh,bsn->bnh", kj, w_new)
+        return (c_new, n_new, m_end), h
+
+    if cfg.unroll_loops:
+        carry = (c0, n0, m0)
+        hs_list = []
+        for i in range(n_chunks):
+            carry, hi = chunk_step(
+                carry, (qc[i], kc[i], vc[i], ic[i], fc[i])
+            )
+            hs_list.append(hi)
+        (c_f, n_f, m_f), hs = carry, jnp.stack(hs_list)
+    else:
+        (c_f, n_f, m_f), hs = jax.lax.scan(
+            chunk_step, (c0, n0, m0), (qc, kc, vc, ic, fc)
+        )
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, t, nh, hd)
+    out = _mlstm_out(cfg, p, h, o, dt)
+    if return_state:
+        return out, {"c": c_f, "n": n_f, "m": m_f}
+    return out, None
+
+
+def mlstm_step(cfg: ModelConfig, p: dict, x: jax.Array, state: dict):
+    """Exact stepwise mLSTM decode. x: (B, 1, D)."""
+    dt = x.dtype
+    q, k, v, itil, logf, o, _ = _mlstm_qkvif(cfg, p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B, nh, hd)
+    itil, logf = itil[:, 0], logf[:, 0]  # (B, nh)
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, itil)
+    w_old = jnp.exp(logf + m - m_new)[..., None]
+    w_new = jnp.exp(itil - m_new)[..., None]
+    c_new = c * w_old[..., None] + w_new[..., None] * k[..., :, None] * v[..., None, :]
+    n_new = n * w_old + w_new * k
+    num = jnp.einsum("bnh,bnhg->bng", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnh,bnh->bn", q, n_new)), jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None]  # (B, 1, nh, hd)
+    out = _mlstm_out(cfg, p, h, o, dt)
+    return out, {"c": c_new, "n": n_new, "m": m_new}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    nh, hd = cfg.n_heads, cfg.xlstm_head_dim
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_x(p: dict, x: jax.Array):
+    """Precompute input projections for all gates: (B, T, 4, nh, hd) fp32."""
+    return jnp.einsum(
+        "btd,dgnh->btgnh", x.astype(jnp.float32), p["w_x"].astype(jnp.float32)
+    ) + p["b"].astype(jnp.float32)
+
+
+def _slstm_cell(p: dict, xg, state):
+    """One sLSTM step.  xg: (B, 4, nh, hd); state: dict of (B, nh, hd)."""
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    rec = jnp.einsum("bnh,gnkh->bgnk", h, p["r_h"].astype(jnp.float32))
+    z = jnp.tanh(xg[:, 0] + rec[:, 0])
+    itil = xg[:, 1] + rec[:, 1]
+    ftil = xg[:, 2] + rec[:, 2]
+    og = jax.nn.sigmoid(xg[:, 3] + rec[:, 3])
+    logf = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(logf + m, itil)
+    i_p = jnp.exp(itil - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = og * c_new / jnp.maximum(n_new, 1e-9)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    state: dict | None = None,
+    *,
+    mode: str,
+):
+    """sLSTM over a sequence (scan) or one step (decode)."""
+    dt = x.dtype
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    if state is None:
+        state = init_slstm_state_dims(b, nh, hd)
+    xg = _slstm_x(p, x)  # (B, T, 4, nh, hd)
+
+    if mode == "decode":
+        new = _slstm_cell(p, xg[:, 0], state)
+        h = new["h"][:, None]  # (B, 1, nh, hd)
+    else:
+        def step(s, xt):
+            s2 = _slstm_cell(p, xt, s)
+            return s2, s2["h"]
+
+        state, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1)  # (B, T, nh, hd)
+        new = state
+    h = layers.rms_norm(h, p["h_norm"]).reshape(*h.shape[:2], d).astype(dt)
+    out = h @ p["w_out"].astype(dt)
+    if mode == "train":
+        return out, None
+    return out, new
+
+
+def init_slstm_state_dims(batch: int, nh: int, hd: int) -> dict:
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z, "n": z + 1e-9, "m": jnp.full((batch, nh, hd), -30.0), "h": z}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    return init_slstm_state_dims(batch, cfg.n_heads, cfg.d_model // cfg.n_heads)

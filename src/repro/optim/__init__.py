@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimizerConfig,
+    adamw_step,
+    clip_by_global_norm,
+    init_opt_state,
+    lr_at,
+)

@@ -1,0 +1,114 @@
+"""AdamW with decoupled weight decay, global-norm clipping, LR schedules.
+
+Pure-JAX (no optax).  Optimizer state is a pytree mirroring params
+({"m", "v"} fp32 moments); under a mesh the moments inherit the param
+shardings and are *additionally* sharded over the data axis (ZeRO-1) by
+the launch scripts' out_shardings (see distributed/sharding.py).
+
+Semantics are the standard decoupled AdamW:
+    m <- b1 m + (1-b1) g         v <- b2 v + (1-b2) g^2
+    mhat = m / (1-b1^t)          vhat = v / (1-b2^t)
+    p <- p - lr * (mhat / (sqrt(vhat) + eps) + wd * p)
+Weight decay is masked out for 1-D params (norms, biases, gates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # "cosine" | "constant" | "linear"
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Schedule value at `step` (traced-friendly)."""
+    step = step.astype(jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(step / cfg.warmup_steps, 1.0)
+    else:
+        warm = jnp.float32(1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+        )
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    else:  # cosine
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+        )
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params: Tree) -> Tree:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros)}
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> tuple[Tree, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_step(
+    cfg: OptimizerConfig,
+    params: Tree,
+    grads: Tree,
+    opt_state: Tree,
+    step: jax.Array,
+) -> tuple[Tree, Tree, jax.Array]:
+    """One AdamW update.  Returns (params, opt_state, lr)."""
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, lr

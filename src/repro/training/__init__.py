@@ -1,0 +1,1 @@
+from repro.training.step import make_train_step  # noqa: F401

@@ -1,0 +1,77 @@
+"""The training step: loss -> grads -> clip -> AdamW (+ grad accumulation).
+
+`make_train_step` returns a pure function suitable for jax.jit with
+donated (params, opt_state).  Gradient accumulation runs microbatches
+under lax.scan (sequential, activation memory / accum), which is also
+the pipelining hook: with remat + scan the compiler overlaps the
+microbatch backward with the gradient all-reduce of the previous one.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, adamw_step, clip_by_global_norm
+
+Tree = Any
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    *,
+    grad_accum: int | None = None,
+):
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    grad_accum defaults to cfg.grad_accum.  With cfg.unroll_loops the
+    microbatch sweep is a static Python loop (roofline accounting).
+    """
+    accum = cfg.grad_accum if grad_accum is None else grad_accum
+
+    def loss_for(params, batch):
+        return transformer.loss_fn(cfg, params, batch)
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        split = jax.tree.map(
+            lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+            batch,
+        )
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        carry = (zero, jnp.float32(0))
+        if cfg.unroll_loops:
+            for i in range(accum):
+                carry, _ = micro(carry, jax.tree.map(lambda x: x[i], split))
+            gsum, loss_sum = carry
+        else:
+            (gsum, loss_sum), _ = jax.lax.scan(micro, carry, split)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        return loss_sum / accum, {}, grads
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state, lr = adamw_step(opt_cfg, params, grads, opt_state, step)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update({k: v for k, v in (metrics or {}).items() if jnp.ndim(v) == 0})
+        return params, opt_state, out
+
+    return train_step

@@ -1,0 +1,19 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout import without install
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: no XLA_FLAGS here on purpose — tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices.
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

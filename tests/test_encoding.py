@@ -1,0 +1,96 @@
+"""Encoder semantics: all uHD paths agree; baseline matches a loop oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HDCConfig, build_codebooks, encoding, fit, model, sobol
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(3)
+    h, d, levels, b = 60, 384, 16, 10
+    x = jnp.asarray(rng.uniform(0, 255, (b, h)), jnp.float32)
+    x_q = encoding.quantize_images(x, levels)
+    table = jnp.asarray(sobol.sobol_table_for_features(h, d, levels))
+    return x, x_q, table, h, d, levels
+
+
+def test_uhd_paths_agree(setup):
+    _, x_q, table, h, d, levels = setup
+    a = encoding.uhd_encode(x_q, table)
+    assert a.shape == (x_q.shape[0], d)
+    assert int(jnp.abs(a).max()) <= h
+    b = encoding.uhd_encode_blocked(x_q, table, block_d=100)
+    c = encoding.uhd_encode_unary_matmul(x_q, table, levels)
+    assert bool((a == b).all())
+    assert bool((a == c).all())
+
+
+def test_uhd_matches_unary_circuit_simulation(setup):
+    """Fast paths == bit-exact simulation of the paper's UST+comparator."""
+    _, x_q, table, h, d, levels = setup
+    a = encoding.uhd_encode(x_q[:3, :20], table[:20, :64])
+    u = encoding.uhd_encode_via_unary_comparator(x_q[:3, :20], table[:20, :64], levels)
+    assert bool((a == u).all())
+
+
+def test_quantize_images_range():
+    x = jnp.asarray([0.0, 127.5, 255.0])
+    q = encoding.quantize_images(x, 16)
+    assert q.tolist() == [0, 8, 16]
+
+
+def test_baseline_encode_matches_loop_oracle(setup):
+    _, x_q, _, h, d, levels = setup
+    key = jax.random.PRNGKey(0)
+    p, lv = encoding.make_baseline_codebooks(key, h, d, levels)
+    got = encoding.baseline_encode(x_q, p, lv)
+    x_np, p_np, lv_np = np.asarray(x_q), np.asarray(p, np.int32), np.asarray(lv, np.int32)
+    want = np.zeros((x_np.shape[0], d), np.int32)
+    for bi in range(x_np.shape[0]):
+        for hi in range(h):
+            want[bi] += p_np[hi] * lv_np[x_np[bi, hi]]
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_level_hypervectors_are_monotone_correlated():
+    """Closer levels must be more similar (paper's level-HV property)."""
+    key = jax.random.PRNGKey(1)
+    _, lv = encoding.make_baseline_codebooks(key, 4, 2048, 16)
+    lv = np.asarray(lv, np.int32)
+    sim01 = (lv[0] * lv[1]).sum()
+    sim08 = (lv[0] * lv[8]).sum()
+    sim016 = (lv[0] * lv[16]).sum()
+    assert sim01 > sim08 > sim016
+
+
+def test_bundle_by_class_is_segment_sum():
+    hvs = jnp.asarray([[1, -1], [3, 5], [-2, 2], [1, 1]], jnp.int32)
+    labels = jnp.asarray([0, 1, 0, 1])
+    out = encoding.bundle_by_class(hvs, labels, 3)
+    assert out.tolist() == [[-1, 1], [4, 6], [0, 0]]
+
+
+def test_uhd_sign_binarize_collapses_on_sparse_data():
+    """Documented failure mode (DESIGN.md): H/2-TOB sign binarization of
+    uHD class HVs is degenerate on sparse images — this test pins the
+    rationale for class_binarize='none' being the uHD default."""
+    from repro.data import make_synthetic
+
+    ds = make_synthetic("synth_mnist", n_train=256, n_test=64, seed=0)
+    cfg = HDCConfig(
+        n_features=ds.n_features, n_classes=ds.n_classes, d=512,
+        class_binarize="sign",
+    )
+    books = build_codebooks(cfg)
+    class_hvs = fit(cfg, books, jnp.asarray(ds.train_images), jnp.asarray(ds.train_labels))
+    collapse = float(jnp.abs(jnp.asarray(class_hvs, jnp.float32).mean(0)).mean())
+    assert collapse > 0.9  # nearly all classes share the same sign pattern
+
+    cfg_ok = dataclasses.replace(cfg, class_binarize="auto")
+    assert cfg_ok.resolved_class_binarize == "none"

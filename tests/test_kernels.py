@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sobol, unary
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+def _case(b, h, d, levels=16, dtype=jnp.int32):
+    x = jnp.asarray(RNG.integers(0, levels + 1, (b, h)), dtype)
+    s = jnp.asarray(sobol.sobol_table_for_features(h, d, levels), dtype)
+    return x, s
+
+
+@pytest.mark.parametrize(
+    "b,h,d",
+    [(1, 17, 64), (8, 112, 512), (12, 100, 700), (5, 784, 1024), (16, 33, 96)],
+)
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int8])
+def test_encode_bundle_kernel(b, h, d, dtype):
+    x, s = _case(b, h, d, dtype=jnp.int32)
+    want = ref.encode_bundle(x, s)
+    got = ops.encode_bundle(x.astype(dtype), s)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,h,d", [(4, 30, 200), (8, 112, 512), (3, 784, 256)])
+def test_encode_unary_mxu_kernel(b, h, d):
+    x, s = _case(b, h, d)
+    want = ref.encode_bundle(x, s)
+    got = ops.encode_unary_mxu(x, s, 16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,h,d", [(4, 50, 512), (8, 112, 1024)])
+def test_encode_bundle_dynamic_kernel(b, h, d):
+    """In-kernel Sobol generation == table-based encode, bit-exact."""
+    x, s = _case(b, h, d)
+    want = ref.encode_bundle(x, s)
+    dirs = jnp.asarray(sobol.direction_matrix(h).astype(np.uint32))
+    got = ops.encode_bundle_dynamic(x, dirs, 16, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sobol_tile_ref_matches_generator():
+    dirs = jnp.asarray(sobol.direction_matrix(16).astype(np.uint32))
+    tile = ref.sobol_tile(dirs, jnp.uint32(1), 64)  # skip=1 convention
+    want = sobol.sobol_integers(16, 64, skip=1).T >> np.uint64(32 - sobol.N_BITS)
+    np.testing.assert_array_equal(np.asarray(tile, np.uint64), want.astype(np.uint64))
+
+
+@pytest.mark.parametrize("b,c,d", [(10, 10, 512), (64, 3, 300), (7, 12, 1024)])
+@pytest.mark.parametrize("binarize", [True, False])
+def test_bundle_binarize_kernel(b, c, d, binarize):
+    hvs = jnp.asarray(RNG.integers(-50, 50, (b, d)), jnp.int32)
+    labels = jnp.asarray(RNG.integers(0, c, (b,)), jnp.int32)
+    onehot = jax.nn.one_hot(labels, c).T
+    got = ops.bundle_binarize(hvs, labels, c, binarize=binarize)
+    if binarize:
+        want = ref.bundle_binarize(hvs, onehot)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        want = jnp.einsum("cb,bd->cd", onehot, hvs.astype(jnp.float32)).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,c,d", [(4, 10, 256), (130, 11, 800), (1, 1, 32)])
+def test_hamming_packed_kernel(b, c, d):
+    q = jnp.asarray(RNG.integers(-3, 4, (b, d)), jnp.int32)
+    cl = jnp.asarray(RNG.integers(-3, 4, (c, d)), jnp.int32)
+    qw, cw = unary.pack_hypervector(q), unary.pack_hypervector(cl)
+    want = ref.hamming_packed(qw, cw, d)
+    got = ops.hamming_packed(qw, cw, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # cross-check against the +-1 integer dot
+    qv = np.where(np.asarray(q) >= 0, 1, -1)
+    cv = np.where(np.asarray(cl) >= 0, 1, -1)
+    np.testing.assert_array_equal(np.asarray(got), qv @ cv.T)
+
+
+def test_kernel_in_model_path():
+    """HDCConfig(use_kernels=True) routes through the Pallas encode."""
+    from repro.core import HDCConfig, build_codebooks, encode
+
+    cfg = HDCConfig(n_features=49, n_classes=4, d=256, use_kernels=True)
+    books = build_codebooks(cfg)
+    x = jnp.asarray(RNG.uniform(0, 255, (6, 49)), jnp.float32)
+    got = encode(cfg, books, x)
+    cfg2 = HDCConfig(n_features=49, n_classes=4, d=256, encode_impl="naive")
+    want = encode(cfg2, books, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,69 @@
+"""Sobol generator: primitivity, LD quality, determinism, quantization."""
+
+import numpy as np
+import pytest
+
+from repro.core import sobol
+
+
+def test_primitive_polynomials_are_primitive():
+    polys = sobol.primitive_polynomials(64)
+    assert len(set(polys)) == 64
+    for p in polys:
+        deg = p.bit_length() - 1
+        assert sobol._is_primitive(p, deg)
+    # degrees must be non-decreasing
+    degs = [p.bit_length() - 1 for p in polys]
+    assert degs == sorted(degs)
+
+
+def test_dimension_zero_is_van_der_corput():
+    pts = sobol.sobol_sequence(1, 8, skip=1)[:, 0]
+    assert np.allclose(pts[:4], [0.5, 0.75, 0.25, 0.375])
+
+
+def test_star_discrepancy_beats_pseudorandom():
+    n = 2048
+    rng = np.random.default_rng(7)
+    for dim in (0, 3, 50, 300):
+        pts = sobol.sobol_sequence(dim + 1, n)[:, dim]
+        d_sobol = sobol.star_discrepancy_1d(pts)
+        d_rand = np.median(
+            [sobol.star_discrepancy_1d(rng.random(n)) for _ in range(5)]
+        )
+        assert d_sobol < d_rand / 2, (dim, d_sobol, d_rand)
+
+
+def test_balance_and_range():
+    pts = sobol.sobol_sequence(16, 1024)
+    assert pts.min() >= 0.0 and pts.max() < 1.0
+    assert np.abs(pts.mean(0) - 0.5).max() < 0.01
+
+
+def test_determinism_and_seed_sensitivity():
+    a = sobol.sobol_table_for_features(32, 256, 16, seed=0)
+    b = sobol.sobol_table_for_features(32, 256, 16, seed=0)
+    c = sobol.sobol_table_for_features(32, 256, 16, seed=1)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)  # only dims >= 1 change, but some must
+
+
+def test_quantization_matches_float_threshold():
+    levels = 16
+    q = sobol.quantized_sobol(8, 512, levels)
+    f = sobol.sobol_sequence(8, 512, dtype=np.float64)
+    assert np.array_equal(q, np.floor(f * levels).astype(np.int32))
+    assert q.min() >= 0 and q.max() < levels
+
+
+def test_quantized_levels_power_of_two_required():
+    with pytest.raises(ValueError):
+        sobol.quantized_sobol(4, 16, 12)
+
+
+def test_direction_matrix_shapes():
+    v = sobol.direction_matrix(8)
+    assert v.shape == (8, sobol.N_BITS)
+    assert v.dtype == np.uint64
+    # left-justified: top bit of v_1 is set for every dimension
+    assert ((v[:, 0] >> np.uint64(sobol.N_BITS - 1)) & np.uint64(1)).all()

@@ -1,0 +1,71 @@
+"""Unary bit-stream machinery: property tests against integer semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import unary
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 80), st.integers(0, 80))
+def test_thermometer_roundtrip(n_bits, val):
+    val = min(val, n_bits)
+    t = unary.to_thermometer(jnp.asarray([val]), n_bits)
+    assert int(unary.from_thermometer(t)[0]) == val
+
+
+@given(st.integers(1, 80), st.lists(st.integers(0, 80), min_size=1, max_size=8))
+def test_pack_unpack_roundtrip(n_bits, vals):
+    vals = jnp.asarray([min(v, n_bits) for v in vals])
+    bits = unary.to_thermometer(vals, n_bits)
+    packed = unary.pack_bits(bits)
+    assert packed.shape[-1] == unary.n_words(n_bits)
+    unpacked = unary.unpack_bits(packed, n_bits)
+    assert bool((unpacked == bits).all())
+
+
+@given(st.integers(1, 70), st.integers(0, 70), st.integers(0, 70))
+def test_unary_comparator_equals_integer_ge(n_bits, a, b):
+    """The paper's AND/OR/reduce comparator (Fig. 4) == integer >=."""
+    a, b = min(a, n_bits), min(b, n_bits)
+    ust = unary.unary_stream_table(n_bits)
+    ge = unary.unary_ge(ust[a], ust[b], n_bits)
+    assert bool(ge) == (a >= b)
+
+
+@given(st.integers(1, 70), st.integers(0, 70), st.integers(0, 70))
+def test_unary_min_is_and(n_bits, a, b):
+    a, b = min(a, n_bits), min(b, n_bits)
+    ust = unary.unary_stream_table(n_bits)
+    m = unary.unary_min(ust[a], ust[b])
+    assert int(unary.popcount(m)) == min(a, b)
+
+
+@given(st.lists(st.integers(-5, 5), min_size=1, max_size=64))
+def test_pack_hypervector_sign(vals):
+    hv = jnp.asarray(vals, jnp.int32)
+    packed = unary.pack_hypervector(hv)
+    back = unary.unpack_hypervector(packed, len(vals))
+    want = np.where(np.asarray(vals) >= 0, 1, -1)
+    assert np.array_equal(np.asarray(back), want)
+
+
+@given(st.lists(st.integers(-9, 9), min_size=1, max_size=48),
+       st.lists(st.integers(-9, 9), min_size=1, max_size=48))
+def test_packed_dot_matches_integer_dot(a, b):
+    n = min(len(a), len(b))
+    av = np.where(np.asarray(a[:n]) >= 0, 1, -1)
+    bv = np.where(np.asarray(b[:n]) >= 0, 1, -1)
+    pa = unary.pack_hypervector(jnp.asarray(a[:n], jnp.int32))
+    pb = unary.pack_hypervector(jnp.asarray(b[:n], jnp.int32))
+    assert int(unary.packed_dot_pm1(pa, pb, n)) == int(av @ bv)
+
+
+@given(st.integers(1, 200), st.integers(0, 200))
+def test_majority_threshold_is_tob(h, count):
+    count = min(count, h)
+    got = bool(unary.majority_threshold(jnp.asarray(count), h))
+    assert got == (2 * count >= h)  # TOB = H/2, ties -> set
