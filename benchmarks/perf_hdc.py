@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench, save_artifact, table
-from repro.core import encoding, sobol
+from repro.core import HDCConfig, HDCModel
 from repro.data import load_dataset
 
 
@@ -26,26 +26,30 @@ def run(b: int = 256, d: int = 4096) -> dict:
     ds = load_dataset("synth_mnist", n_train=b, n_test=1)
     h, levels = ds.n_features, 16
     x = jnp.asarray(ds.train_images[:b])
-    x_q = encoding.quantize_images(x, levels)
-    tab = jnp.asarray(sobol.sobol_table_for_features(h, d, levels))
-    key = jax.random.PRNGKey(0)
-    p, lv = encoding.make_baseline_codebooks(key, h, d, levels)
 
-    rungs = {
-        "baseline PxL": jax.jit(lambda xq: encoding.baseline_encode(xq, p, lv)),
-        "uHD naive": jax.jit(lambda xq: encoding.uhd_encode(xq, tab)),
-        "uHD blocked": jax.jit(lambda xq: encoding.uhd_encode_blocked(xq, tab)),
-        "uHD unary-MXU": jax.jit(
-            lambda xq: encoding.uhd_encode_unary_matmul(xq, tab, levels)
-        ),
-    }
-    want = np.asarray(rungs["uHD naive"](x_q))
+    # rungs come straight from the backend registry — a new registered
+    # datapath shows up here without editing this file.  The bit-exact
+    # unary_oracle and interpret-mode pallas backends are skipped at
+    # this size (minutes per call on CPU); test_api covers them.
+    kw = dict(n_features=h, n_classes=ds.n_classes, d=d, levels=levels)
+    base = HDCModel.create(HDCConfig(encoder="baseline", **kw))
+    uhd = HDCModel.create(HDCConfig(**kw))
+    skip = {"unary_oracle"} | ({"pallas"} if jax.default_backend() != "tpu" else set())
+
+    rungs = {"baseline PxL": jax.jit(lambda xx: base.encode(xx))}
+    for name in uhd.encoder.backends():
+        if name in skip:
+            continue
+        rungs[f"uHD {name}"] = jax.jit(
+            lambda xx, _n=name: uhd.encode(xx, backend=_n)
+        )
+    want = np.asarray(rungs["uHD naive"](x))
     rows, payload = [], {}
     t0 = None
     for name, fn in rungs.items():
-        t = bench(fn, x_q, iters=3)
+        t = bench(fn, x, iters=3)
         if "uHD" in name:
-            np.testing.assert_array_equal(np.asarray(fn(x_q)), want)
+            np.testing.assert_array_equal(np.asarray(fn(x)), want)
         if t0 is None:
             t0 = t
         rows.append([name, f"{t*1e3:8.2f} ms", f"{t0/t:5.2f}x",

@@ -87,7 +87,7 @@ def cell_c() -> None:
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.analysis import roofline
-    from repro.core import HDCConfig, fit, sobol
+    from repro.core import HDCConfig, HDCModel, hdc_model, sobol
     from repro.core import encoding
     from repro.distributed.sharding import set_current_mesh
     from repro.launch.dryrun import _cell_stats, _memory
@@ -98,13 +98,13 @@ def cell_c() -> None:
     set_current_mesh(mesh)
     n, h, d, levels = 65536, 784, 8192, 16
 
-    def lower(fit_fn, books):
+    def lower(fit_fn, arg0):
         images = jax.ShapeDtypeStruct((n, h), jnp.float32,
                                       sharding=NamedSharding(mesh, P("data", None)))
         labels = jax.ShapeDtypeStruct((n,), jnp.int32,
                                       sharding=NamedSharding(mesh, P("data")))
         with mesh:
-            c = jax.jit(fit_fn).lower(books, images, labels).compile()
+            c = jax.jit(fit_fn).lower(arg0, images, labels).compile()
         stats = _cell_stats(c)
         stats["memory"] = _memory(c)
         # VPU-executed compare/elementwise work runs ~16x below MXU peak;
@@ -116,11 +116,12 @@ def cell_c() -> None:
 
     table_spec = NamedSharding(mesh, P(None, "model"))
 
-    for it, impl in (("it0_vpu_compare", "blocked"), ("it1_unary_mxu", "unary_matmul")):
-        cfg = HDCConfig(n_features=h, n_classes=16, d=d, encode_impl=impl)
+    for it, backend in (("it0_vpu_compare", "blocked"), ("it1_unary_mxu", "unary_matmul")):
+        cfg = HDCConfig(n_features=h, n_classes=16, d=d, backend=backend)
         books = {"sobol": jax.ShapeDtypeStruct((h, d), jnp.int8, sharding=table_spec)}
-        print(f" {it}: encode_impl={impl}")
-        rec = lower(lambda b, i, l: fit(cfg, b, i, l), books)
+        model = HDCModel.from_parts(cfg, books)
+        print(f" {it}: backend={backend}")
+        rec = lower(lambda m, i, l: hdc_model.fit(m, i, l), model)
         _record(f"C__{it}", rec)
 
     print(" it2: dynamic Sobol generation (no (H,D) table in HBM)")

@@ -14,13 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench, save_artifact, table
-from repro.core import HDCConfig, build_codebooks, encode
+from repro.core import HDCConfig, HDCModel
 from repro.data import load_dataset
 
 
-def codebook_bytes(cfg: HDCConfig) -> int:
-    books = build_codebooks(cfg)
-    return sum(v.size * v.dtype.itemsize for v in books.values())
+def codebook_bytes(model: HDCModel) -> int:
+    return sum(v.size * v.dtype.itemsize for v in model.codebooks.values())
 
 
 def run(ds_name: str = "synth_mnist") -> dict:
@@ -32,11 +31,11 @@ def run(ds_name: str = "synth_mnist") -> dict:
             cfg = HDCConfig(
                 n_features=ds.n_features, n_classes=ds.n_classes, d=d, encoder=enc
             )
-            books = build_codebooks(cfg)
+            model = HDCModel.create(cfg)
             x1 = jnp.asarray(ds.train_images[:1])
-            f = jax.jit(lambda b, x: encode(cfg, b, x))
-            t = bench(f, books, x1)
-            mem = codebook_bytes(cfg) + d * 4  # codebooks + one image HV
+            f = jax.jit(lambda m, x: m.encode(x))
+            t = bench(f, model, x1)
+            mem = codebook_bytes(model) + d * 4  # codebooks + one image HV
             res[enc] = (t, mem)
         # dynamic-generator uHD: only the (H, 32) direction matrix is stored
         from repro.core import sobol

@@ -1,18 +1,17 @@
 """The paper's system as a distributed workload: sharded single-pass
-uHD training with one (C, D) psum — plus the Pallas kernel path.
+uHD training with one (C, D) psum — plus the Pallas kernel path and an
+HDCModel checkpoint round-trip.
 
     PYTHONPATH=src python examples/hdc_at_scale.py
 """
 
 import sys
+import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
-from repro.core import HDCConfig, build_codebooks, evaluate, fit  # noqa: E402
+from repro.core import HDCConfig, HDCModel  # noqa: E402
 from repro.data import load_dataset  # noqa: E402
 from repro.distributed.sharding import set_current_mesh  # noqa: E402
 from repro.launch.mesh import mesh_for  # noqa: E402
@@ -23,18 +22,26 @@ print("mesh:", dict(mesh.shape))
 
 ds = load_dataset("synth_mnist", n_train=2048, n_test=512)
 
-# kernel path: fused Pallas encode+bundle (interpret mode on CPU)
-for use_kernels, tag in ((False, "jnp (unary-MXU matmul)"), (True, "Pallas fused kernel")):
+# datapaths are registry names now: the same model runs the MXU-shaped
+# unary matmul or the fused Pallas kernel (interpret mode on CPU)
+for backend, tag in (("unary_matmul", "jnp (unary-MXU matmul)"),
+                     ("pallas", "Pallas fused kernel")):
     cfg = HDCConfig(
         n_features=ds.n_features, n_classes=ds.n_classes, d=1024,
-        use_kernels=use_kernels,
+        backend=backend,
     )
-    books = build_codebooks(cfg)
     with mesh:
-        class_hvs = fit(cfg, books, jnp.asarray(ds.train_images[:512]),
-                        jnp.asarray(ds.train_labels[:512]))
-        acc = evaluate(cfg, books, class_hvs, ds.test_images[:256], ds.test_labels[:256])
+        model = HDCModel.create(cfg).shard(mesh)  # D-axis over "model"
+        model = model.fit(ds.train_images[:512], ds.train_labels[:512])
+        acc = model.evaluate(ds.test_images[:256], ds.test_labels[:256])
     print(f"{tag:28s}: accuracy {acc:.4f}")
+
+# a trained model is one pytree: checkpoint it and restore onto the mesh
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    model.save(ckpt_dir, step=0)
+    restored = HDCModel.load(ckpt_dir, mesh=mesh)
+    same = restored.evaluate(ds.test_images[:256], ds.test_labels[:256]) == acc
+    print(f"checkpoint round-trip onto mesh: predictions identical = {same}")
 
 print("\nFor the 256/512-chip version of this exact computation see:")
 print("  PYTHONPATH=src python -m repro.launch.dryrun --arch hdc_mnist")

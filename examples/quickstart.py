@@ -1,5 +1,10 @@
 """Quickstart: uHD image classification in ~30 lines (the paper, end to end).
 
+The whole API is two objects: `HDCConfig` (static settings — encoder
+and datapath are picked *by name* through the encoder/backend registry)
+and `HDCModel` (codebooks + class-hypervector state as one pytree, with
+`fit` / `partial_fit` / `predict` / `evaluate` / `save` / `load`).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -8,7 +13,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import HDCConfig, train_and_eval, baseline_iterative_search  # noqa: E402
+from repro.core import HDCConfig, HDCModel, baseline_iterative_search  # noqa: E402
 from repro.data import load_dataset  # noqa: E402
 
 # 1. data: MNIST if $REPRO_DATA_DIR has it, else the synthetic analogue
@@ -16,10 +21,13 @@ ds = load_dataset("mnist", n_train=2048, n_test=512)
 print(f"dataset: {ds.name} ({'synthetic' if ds.synthetic else 'real'}), "
       f"{ds.n_features} features, {ds.n_classes} classes")
 
-# 2. uHD: deterministic Sobol encoding, position-free, single training pass
+# 2. uHD: deterministic Sobol encoding, position-free, single training pass.
+#    backend="auto" resolves per platform (Pallas kernels on TPU, the
+#    MXU-shaped unary matmul elsewhere); any registered backend name —
+#    "naive", "blocked", "unary_matmul", "pallas", "unary_oracle" — works.
 cfg = HDCConfig(n_features=ds.n_features, n_classes=ds.n_classes, d=4096)
-acc = train_and_eval(cfg, ds.train_images, ds.train_labels,
-                     ds.test_images, ds.test_labels)
+model = HDCModel.create(cfg).fit(ds.train_images, ds.train_labels)
+acc = model.evaluate(ds.test_images, ds.test_labels)
 print(f"uHD  @ i=1 (one pass):      accuracy = {acc:.4f}")
 
 # 3. the baseline the paper compares against: pseudo-random P x L encoding,

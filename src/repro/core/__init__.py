@@ -1,4 +1,18 @@
-"""uHD core: Sobol LD sequences, unary bit-streams, HDC encoders and models."""
+"""uHD core: Sobol LD sequences, unary bit-streams, HDC encoders and models.
+
+Public API (see DESIGN.md):
+
+  * :class:`HDCConfig` — static configuration (``backend`` selects the
+    datapath by name).
+  * :class:`HDCModel` — the pytree state object: codebooks + class-HV
+    accumulator, with ``fit`` / ``partial_fit`` / ``predict`` /
+    ``evaluate`` / ``save`` / ``load`` / ``shard``.
+  * :mod:`repro.core.registry` — encoder/backend registries:
+    ``register_encoder``, ``register_backend``, ``resolve_backend``.
+
+The flat functions (``build_codebooks``, ``encode``, ``fit``, ...) are
+deprecated shims kept for older call sites.
+"""
 
 from repro.core.model import (  # noqa: F401
     HDCConfig,
@@ -11,3 +25,16 @@ from repro.core.model import (  # noqa: F401
     predict,
     train_and_eval,
 )
+from repro.core.hdc_model import HDCModel  # noqa: F401
+from repro.core.registry import (  # noqa: F401
+    BackendUnavailableError,
+    Encoder,
+    EncoderBase,
+    backend_names,
+    encoder_names,
+    get_encoder,
+    register_backend,
+    register_encoder,
+    resolve_backend,
+)
+from repro.core import encoders as _builtin_encoders  # noqa: F401  (registers)

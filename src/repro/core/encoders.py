@@ -1,0 +1,149 @@
+"""Built-in encoders and their registered backends.
+
+Two encoders ship with the repro, matching the paper:
+
+  * ``"uhd"`` — position-free Sobol/unary encoding (contribution 2),
+    with five equivalent datapaths: ``naive`` (broadcast compare),
+    ``blocked`` (D-tiled compare, bounded transient), ``unary_matmul``
+    (thermometer x one-hot binary GEMM on the MXU), ``pallas`` (fused
+    Pallas encode+bundle kernel; interpret mode off-TPU), and
+    ``unary_oracle`` (bit-exact simulation of the paper's UST +
+    unary-comparator circuit — slow, the reference every other backend
+    is tested against).
+  * ``"baseline"`` — comparator-generated pseudo-random P x L
+    bind+bundle (paper Fig. 1), with ``naive`` (gather + multiply
+    reference) and ``unary_matmul`` (one-hot contraction) datapaths.
+
+Registering a new encoder or datapath is purely additive — see
+:mod:`repro.core.registry`; no dispatch code needs editing.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding, sobol
+from repro.core.registry import EncoderBase, register_backend, register_encoder
+
+if TYPE_CHECKING:
+    from repro.core.model import HDCConfig
+
+
+def _pallas_available(platform: str) -> bool:
+    """Pallas runs natively on TPU and in interpret mode elsewhere —
+    usable anywhere the kernel package imports."""
+    try:
+        from repro.kernels import ops  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# uHD: position-free Sobol/unary encoder
+# ---------------------------------------------------------------------------
+
+
+@register_encoder("uhd")
+class UHDEncoder(EncoderBase):
+    """Deterministic Sobol thresholds; no position HVs, no binding."""
+
+    reference_backend = "unary_oracle"
+    auto_order = {
+        # On TPU the fused Pallas kernel is native; elsewhere interpret
+        # mode is correct but slow, so the MXU-shaped matmul leads.
+        "tpu": ("pallas", "unary_matmul", "blocked", "naive"),
+        "default": ("unary_matmul", "blocked", "naive"),
+    }
+
+    def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
+        table = sobol.sobol_table_for_features(
+            cfg.n_features, cfg.d, cfg.levels, seed=cfg.seed, skip=cfg.sobol_skip
+        )
+        # M-bit quantized thresholds are stored narrow (int8 here; the
+        # paper's BRAM packs them at M=4 bits) — compute promotes to i32
+        return {"sobol": jnp.asarray(table, self._sobol_dtype(cfg))}
+
+    @staticmethod
+    def _sobol_dtype(cfg: "HDCConfig"):
+        return jnp.int8 if cfg.levels <= 127 else jnp.int32
+
+    def codebook_specs(self, cfg: "HDCConfig") -> dict[str, jax.ShapeDtypeStruct]:
+        # explicit: the Sobol table is generated host-side with numpy,
+        # which eval_shape would execute for real
+        return {
+            "sobol": jax.ShapeDtypeStruct(
+                (cfg.n_features, cfg.d), self._sobol_dtype(cfg)
+            )
+        }
+
+
+@register_backend("uhd", "naive")
+def _uhd_naive(cfg, books, x_q):
+    """Broadcast-compare reference ((B, H, D) transient)."""
+    return encoding.uhd_encode(x_q, books["sobol"])
+
+
+@register_backend("uhd", "blocked")
+def _uhd_blocked(cfg, books, x_q):
+    """D-tiled compare: bounded (B, H, Dblk) transient."""
+    return encoding.uhd_encode_blocked(x_q, books["sobol"])
+
+
+@register_backend("uhd", "unary_matmul")
+def _uhd_unary_matmul(cfg, books, x_q):
+    """Thermometer x one-hot binary GEMM (MXU-unary formulation)."""
+    return encoding.uhd_encode_unary_matmul(x_q, books["sobol"], cfg.levels)
+
+
+@register_backend("uhd", "pallas", available=_pallas_available)
+def _uhd_pallas(cfg, books, x_q):
+    """Fused Pallas encode+bundle kernel (interpret mode off-TPU)."""
+    from repro.kernels import ops  # local import: kernels are optional
+
+    return ops.encode_bundle(x_q, books["sobol"])
+
+
+@register_backend("uhd", "unary_oracle")
+def _uhd_unary_oracle(cfg, books, x_q):
+    """Bit-exact UST + unary-comparator circuit simulation (slow)."""
+    return encoding.uhd_encode_via_unary_comparator(
+        x_q, books["sobol"].astype(jnp.int32), cfg.levels
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baseline HDC: pseudo-random P x L bind+bundle
+# ---------------------------------------------------------------------------
+
+
+@register_encoder("baseline")
+class BaselineEncoder(EncoderBase):
+    """Comparator-generated pseudo-random position/level codebooks."""
+
+    reference_backend = "naive"
+    auto_order = {"default": ("unary_matmul", "naive")}
+
+    def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
+        # `seed` selects the pseudo-random draw — the paper's iteration
+        # index i maps to seed=i.
+        key = jax.random.PRNGKey(cfg.seed)
+        p, level = encoding.make_baseline_codebooks(
+            key, cfg.n_features, cfg.d, cfg.levels
+        )
+        return {"p": p, "level": level}
+
+
+@register_backend("baseline", "naive")
+def _baseline_naive(cfg, books, x_q):
+    """Gather + elementwise bind reference ((B, H, D) transient)."""
+    return encoding.baseline_encode_naive(x_q, books["p"], books["level"])
+
+
+@register_backend("baseline", "unary_matmul")
+def _baseline_unary_matmul(cfg, books, x_q):
+    """One-hot contracted bind+bundle: a single (B, HV) @ (HV, D) GEMM."""
+    return encoding.baseline_encode(x_q, books["p"], books["level"])

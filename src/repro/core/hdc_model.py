@@ -1,0 +1,354 @@
+"""`HDCModel`: the one state object of the HDC stack.
+
+The seed threaded a loose ``(cfg, dict-of-codebooks, class_hvs)``
+triple through every call site.  `HDCModel` bundles the three into a
+single pytree-registered dataclass:
+
+  * **jit-stable** — registered with ``jax.tree_util``; the config is
+    static aux data, so ``jax.jit(partial_fit)(model, x, y)`` retraces
+    only when the config changes;
+  * **streaming-native** — the model carries the *raw* per-class
+    accumulator (``class_sums``) and applies the binarization policy
+    lazily (``class_hvs`` property), so ``partial_fit`` over batches is
+    bit-identical to one ``fit`` over the concatenation;
+  * **checkpointable** — ``save``/``load`` round-trip through
+    :mod:`repro.checkpoint.manager` (atomic, async-capable, elastic),
+    with the config embedded in the manifest;
+  * **shardable** — ``shardings(mesh)`` mirrors the model with
+    ``NamedSharding`` leaves (D axis over the "model" mesh axis when it
+    divides), consumed by ``shard`` and by elastic checkpoint restore.
+
+Module-level ``fit`` / ``partial_fit`` / ``predict`` are the pure jitted
+functions; the methods are thin conveniences over them.  Encoding
+dispatch goes through :mod:`repro.core.registry` — the model never
+branches on encoder or backend names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Iterable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import encoding, metrics, registry, unary
+from repro.core.model import HDCConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HDCModel:
+    """Config + codebooks + class-HV state, as one pytree.
+
+    ``class_sums`` is the raw int32 accumulator of bundled class
+    hypervectors; ``n_seen`` counts accumulated examples.  The
+    inference-time class HVs (binarized per ``cfg.class_binarize``)
+    are derived, never stored — see ``class_hvs``.
+    """
+
+    cfg: HDCConfig
+    codebooks: dict[str, jax.Array]
+    class_sums: jax.Array  # (C, D) int32 raw bundling accumulator
+    n_seen: jax.Array  # () int32 examples accumulated so far
+
+    # -- pytree protocol -------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.codebooks, self.class_sums, self.n_seen), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        codebooks, class_sums, n_seen = children
+        return cls(cfg=cfg, codebooks=codebooks, class_sums=class_sums, n_seen=n_seen)
+
+    def replace(self, **kw) -> "HDCModel":
+        return dataclasses.replace(self, **kw)
+
+    # -- construction ----------------------------------------------------
+
+    @classmethod
+    def create(cls, cfg: HDCConfig) -> "HDCModel":
+        """Fresh untrained model: codebooks built, accumulator zeroed."""
+        enc = registry.get_encoder(cfg.encoder)
+        return cls.from_parts(cfg, enc.build_codebooks(cfg))
+
+    @classmethod
+    def from_parts(
+        cls,
+        cfg: HDCConfig,
+        codebooks: dict[str, jax.Array],
+        class_sums: jax.Array | None = None,
+        n_seen: jax.Array | int = 0,
+    ) -> "HDCModel":
+        """Assemble from pre-built pieces (legacy call sites, dry-runs)."""
+        if class_sums is None:
+            class_sums = jnp.zeros((cfg.n_classes, cfg.d), jnp.int32)
+        return cls(
+            cfg=cfg,
+            codebooks=codebooks,
+            class_sums=class_sums,
+            n_seen=jnp.asarray(n_seen, jnp.int32),
+        )
+
+    # -- derived state ---------------------------------------------------
+
+    @property
+    def class_hvs(self) -> jax.Array:
+        """Inference-time class hypervectors per the binarization policy."""
+        if self.cfg.resolved_class_binarize == "sign":
+            return encoding.binarize(self.class_sums).astype(jnp.int32)
+        return self.class_sums
+
+    @property
+    def encoder(self) -> registry.EncoderBase:
+        return registry.get_encoder(self.cfg.encoder)
+
+    # -- core ops (delegate to the jitted module functions) --------------
+
+    def encode(self, images: jax.Array, *, backend: str | None = None) -> jax.Array:
+        """Raw images (B, H) -> non-binary hypervectors (B, D) int32."""
+        cfg = self.cfg
+        x_q = encoding.quantize_images(
+            jnp.asarray(images), cfg.levels, cfg.max_intensity
+        )
+        return self.encoder.encode(
+            cfg, self.codebooks, x_q, backend=backend or cfg.backend
+        )
+
+    def fit(self, images: jax.Array, labels: jax.Array) -> "HDCModel":
+        """Single-pass training on this data alone (accumulator reset)."""
+        return fit(self, jnp.asarray(images), jnp.asarray(labels))
+
+    def partial_fit(self, images: jax.Array, labels: jax.Array) -> "HDCModel":
+        """Streaming training: accumulate one batch into the class sums."""
+        return partial_fit(self, jnp.asarray(images), jnp.asarray(labels))
+
+    def fit_batches(self, batches: Iterable[tuple[Any, Any]]) -> "HDCModel":
+        """Memory-bounded fit over an iterator of (images, labels) —
+        identical semantics to `fit` on the concatenated data."""
+        model = self.reset()
+        for images, labels in batches:
+            model = model.partial_fit(images, labels)
+        return model
+
+    def reset(self) -> "HDCModel":
+        """Drop accumulated class state (codebooks are kept)."""
+        return self.replace(
+            class_sums=jnp.zeros_like(self.class_sums),
+            n_seen=jnp.zeros_like(self.n_seen),
+        )
+
+    def predict(self, images: jax.Array) -> jax.Array:
+        """Classify images -> (B,) int32 predicted labels."""
+        return predict(self, jnp.asarray(images))
+
+    def evaluate(
+        self, images: Any, labels: Any, batch_size: int = 1024
+    ) -> float:
+        """Test accuracy, evaluated in batches."""
+        n = len(images)
+        correct = 0
+        for i in range(0, n, batch_size):
+            pred = self.predict(jnp.asarray(images[i : i + batch_size]))
+            correct += int((pred == jnp.asarray(labels[i : i + batch_size])).sum())
+        return correct / n
+
+    # -- persistence (repro.checkpoint.manager) --------------------------
+
+    def _state_tree(self) -> dict[str, Any]:
+        return {
+            "codebooks": self.codebooks,
+            "class_sums": self.class_sums,
+            "n_seen": self.n_seen,
+        }
+
+    def save(
+        self, path: str | Path, *, step: int = 0, blocking: bool = True, keep_n: int = 3
+    ) -> None:
+        """Atomic checkpoint under `path` (one step directory).
+
+        The config rides in the manifest, so `load` needs only the path.
+        """
+        from repro.checkpoint.manager import CheckpointManager
+
+        mgr = CheckpointManager(path, keep_n=keep_n)
+        raw_cfg = dataclasses.asdict(self.cfg)
+        # the deprecated aliases are already folded into `backend`; keeping
+        # them in the manifest would re-warn on every future load
+        raw_cfg.pop("use_kernels", None)
+        raw_cfg.pop("encode_impl", None)
+        mgr.save(
+            step,
+            self._state_tree(),
+            blocking=blocking,
+            extra={"hdc_config": raw_cfg},
+        )
+
+    @classmethod
+    def load(
+        cls,
+        path: str | Path,
+        *,
+        step: int | None = None,
+        mesh: Mesh | None = None,
+    ) -> "HDCModel":
+        """Restore a saved model; with `mesh`, arrays land pre-sharded
+        (elastic restore onto a different device count is supported)."""
+        from repro.checkpoint.manager import CheckpointManager
+
+        mgr = CheckpointManager(path)
+        if step is None:
+            step = mgr.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {path}")
+        raw = mgr.extra(step).get("hdc_config")
+        if raw is None:
+            raise ValueError(f"checkpoint step {step} has no hdc_config manifest")
+        raw.pop("use_kernels", None)  # older manifests may carry the aliases
+        raw.pop("encode_impl", None)
+        cfg = HDCConfig(**raw)
+        # abstract template: restore needs only structure + shapes, so the
+        # codebooks (host-side Sobol generation for uHD) are never built
+        like = cls(
+            cfg=cfg,
+            codebooks=registry.get_encoder(cfg.encoder).codebook_specs(cfg),
+            class_sums=jax.ShapeDtypeStruct((cfg.n_classes, cfg.d), jnp.int32),
+            n_seen=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        shardings = like.shardings(mesh)._state_tree() if mesh is not None else None
+        state = mgr.restore(step, like._state_tree(), shardings=shardings)
+        return cls(cfg=cfg, **state)
+
+    # -- distribution ----------------------------------------------------
+
+    def shardings(self, mesh: Mesh, *, rules=None) -> "HDCModel":
+        """Mirror of this model with NamedSharding leaves.
+
+        Arrays whose trailing axis is D shard over the "model" mesh axis
+        (when present and dividing — the same graceful-fallback contract
+        as repro.distributed.sharding); everything else replicates.
+        """
+        from repro.distributed.sharding import ShardingRules
+
+        rules = rules or ShardingRules()
+        axis = rules.model_axis if rules.model_axis in mesh.axis_names else None
+        msize = mesh.shape[axis] if axis else 1
+
+        def spec(leaf) -> NamedSharding:
+            shape = tuple(getattr(leaf, "shape", ()))
+            if (
+                axis
+                and shape
+                and shape[-1] == self.cfg.d
+                and shape[-1] % msize == 0
+            ):
+                return NamedSharding(mesh, P(*([None] * (len(shape) - 1)), axis))
+            return NamedSharding(mesh, P())
+
+        return jax.tree_util.tree_map(spec, self)
+
+    def shard(self, mesh: Mesh, *, rules=None) -> "HDCModel":
+        """device_put every leaf per `shardings(mesh)`."""
+        return jax.device_put(self, self.shardings(mesh, rules=rules))
+
+
+# ---------------------------------------------------------------------------
+# Pure jitted training/inference functions (cfg rides statically in the
+# model's treedef — retrace only on config change)
+# ---------------------------------------------------------------------------
+
+
+def _encode(model: HDCModel, images: jax.Array) -> jax.Array:
+    cfg = model.cfg
+    x_q = encoding.quantize_images(images, cfg.levels, cfg.max_intensity)
+    enc = registry.get_encoder(cfg.encoder)
+    return enc.encode(cfg, model.codebooks, x_q, backend=cfg.backend)
+
+
+@jax.jit
+def partial_fit(model: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
+    """Accumulate one batch of bundled class sums into the model."""
+    hvs = _encode(model, images)
+    sums = encoding.bundle_by_class(hvs, labels, model.cfg.n_classes)
+    return model.replace(
+        class_sums=model.class_sums + sums,
+        n_seen=model.n_seen + jnp.asarray(labels.shape[0], jnp.int32),
+    )
+
+
+@jax.jit
+def fit(model: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
+    """Single-pass training from scratch: reset, encode, bundle."""
+    hvs = _encode(model, images)
+    sums = encoding.bundle_by_class(hvs, labels, model.cfg.n_classes)
+    return model.replace(
+        class_sums=sums, n_seen=jnp.asarray(labels.shape[0], jnp.int32)
+    )
+
+
+@jax.jit
+def predict(model: HDCModel, images: jax.Array) -> jax.Array:
+    """Encode queries, score against class HVs, argmax."""
+    cfg = model.cfg
+    q = _encode(model, images)
+    if cfg.binarize_query:
+        q = encoding.binarize(q).astype(jnp.int32)
+    class_hvs = model.class_hvs
+    if cfg.similarity == "hamming":
+        qw = unary.pack_hypervector(q)
+        cw = unary.pack_hypervector(class_hvs)
+        sim = metrics.hamming_similarity_packed(qw, cw, cfg.d).astype(jnp.float32)
+    else:
+        sim = metrics.SIMILARITIES[cfg.similarity](q, class_hvs)
+    return metrics.classify(sim)
+
+
+def train_and_eval(
+    cfg: HDCConfig,
+    train_images: np.ndarray,
+    train_labels: np.ndarray,
+    test_images: np.ndarray,
+    test_labels: np.ndarray,
+    batch_size: int = 2048,
+) -> float:
+    """Convenience end-to-end: create, fit (streamed), evaluate."""
+    model = HDCModel.create(cfg)
+
+    def batches():
+        for i in range(0, len(train_images), batch_size):
+            yield train_images[i : i + batch_size], train_labels[i : i + batch_size]
+
+    return model.fit_batches(batches()).evaluate(test_images, test_labels)
+
+
+def baseline_iterative_search(
+    base_cfg: HDCConfig,
+    train_images: np.ndarray,
+    train_labels: np.ndarray,
+    test_images: np.ndarray,
+    test_labels: np.ndarray,
+    iterations: int,
+    batch_size: int = 2048,
+) -> list[float]:
+    """The paper's baseline protocol: regenerate pseudo-random P/L per
+    iteration i, retrain, record test accuracy (Table IV / Fig. 6(a)).
+    """
+    accs = []
+    for i in range(iterations):
+        # Backend names are per-encoder: switching to the baseline
+        # encoder resets datapath selection to "auto".
+        cfg = dataclasses.replace(
+            base_cfg, encoder="baseline", seed=i, backend="auto",
+            use_kernels=None, encode_impl=None,
+        )
+        accs.append(
+            train_and_eval(
+                cfg, train_images, train_labels, test_images, test_labels, batch_size
+            )
+        )
+    return accs

@@ -1,29 +1,47 @@
-"""The HDC classifier: single-pass training, similarity inference.
+"""`HDCConfig` plus the legacy functional API (deprecation shims).
 
-This is the paper's end-to-end system (Fig. 5): encode every training
-image, bundle per class, binarize once, then classify test images by
-cosine similarity against the class hypervectors.  uHD trains in a
-single deterministic pass (i=1); the baseline supports the iterative
-pseudo-random regeneration loop (i=1..100) the paper benchmarks against.
+The paper's end-to-end system (Fig. 5) lives in
+:class:`repro.core.hdc_model.HDCModel`: encode every training image,
+bundle per class, binarize once, classify by similarity against the
+class hypervectors.  uHD trains in a single deterministic pass (i=1);
+the baseline supports the iterative pseudo-random regeneration loop
+(i=1..100) the paper benchmarks against.
 
-Distribution: `fit`/`evaluate` are pure SPMD functions of sharded image
-batches — under a mesh, images shard over ("pod","data") and the class
-bundling reduces with one psum of (C, D).  `d`-axis sharding ("model")
-is supported for very large D.  See launch/train_hdc.py.
+This module keeps two things:
+
+  * :class:`HDCConfig` — the static configuration.  Datapath selection
+    is a single ``backend`` name resolved through
+    ``repro.core.registry.resolve_backend``; the former ``use_kernels``
+    / ``encode_impl`` flags are accepted as deprecated aliases and
+    rewritten into ``backend`` with a ``DeprecationWarning``.
+  * the original functional API (``build_codebooks`` / ``encode`` /
+    ``fit`` / ``fit_streaming`` / ``predict`` / ``evaluate``) as thin
+    deprecated wrappers forwarding to ``HDCModel`` — existing call
+    sites keep working while new code uses the model object.
+
+Distribution: training/inference are pure SPMD functions of sharded
+image batches — under a mesh, images shard over ("pod","data") and the
+class bundling reduces with one psum of (C, D).  `d`-axis sharding
+("model") is supported for very large D.  See DESIGN.md §3 and
+launch/train_hdc.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Any
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import encoding, metrics, sobol, unary
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.{old} is deprecated; use {new} (see DESIGN.md §2)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +52,7 @@ class HDCConfig:
     n_classes: int
     d: int = 8192  # hypervector dimensionality D
     levels: int = 16  # xi quantization levels (M = log2(levels) bits)
-    encoder: str = "uhd"  # "uhd" | "baseline"
+    encoder: str = "uhd"  # any name in repro.core.registry.encoder_names()
     seed: int = 0
     sobol_skip: int = 1
     # Class-HV binarization policy.  "auto" resolves to "sign" for the
@@ -48,17 +66,52 @@ class HDCConfig:
     class_binarize: str = "auto"  # "auto" | "sign" | "none"
     binarize_query: bool = False  # TOB-binarize query HVs (Fig. 5 datapath)
     similarity: str = "cosine"  # "cosine" | "dot" | "hamming"
-    use_kernels: bool = False  # route encode/bundle through Pallas kernels
-    encode_impl: str = "unary_matmul"  # "blocked" | "naive" | "unary_matmul"
+    # Datapath by name, resolved via registry.resolve_backend: "auto"
+    # walks the encoder's per-platform fallback order; explicit names
+    # ("naive" | "blocked" | "unary_matmul" | "pallas" | "unary_oracle"
+    # for uHD) are honoured exactly.
+    backend: str = "auto"
     max_intensity: float = 255.0
+    # DEPRECATED aliases, kept only so old call sites construct; both are
+    # rewritten into `backend` in __post_init__ with a DeprecationWarning.
+    use_kernels: bool | None = None
+    encode_impl: str | None = None
 
     def __post_init__(self):
-        if self.encoder not in ("uhd", "baseline"):
-            raise ValueError(f"unknown encoder {self.encoder!r}")
         if self.levels & (self.levels - 1):
             raise ValueError("levels must be a power of two")
         if self.class_binarize not in ("auto", "sign", "none"):
             raise ValueError(f"unknown class_binarize {self.class_binarize!r}")
+        # Deprecation shim: map the legacy flags onto a backend name.
+        if self.use_kernels is not None or self.encode_impl is not None:
+            warnings.warn(
+                "HDCConfig(use_kernels=..., encode_impl=...) is deprecated; "
+                "pass backend='pallas'/'unary_matmul'/'blocked'/'naive' "
+                "instead (see DESIGN.md §1)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            if self.backend == "auto":
+                # Old dispatch order: use_kernels first, else encode_impl
+                # (default "unary_matmul").  An explicit use_kernels=False
+                # must keep the jnp path even on TPU.
+                if self.use_kernels:
+                    object.__setattr__(self, "backend", "pallas")
+                else:
+                    object.__setattr__(
+                        self, "backend", self.encode_impl or "unary_matmul"
+                    )
+        from repro.core import registry  # deferred: avoids an import cycle
+
+        registry.get_encoder(self.encoder)  # raises on unknown encoder
+        if self.backend != "auto" and self.backend not in registry.backend_names(
+            self.encoder
+        ):
+            raise ValueError(
+                f"unknown backend {self.backend!r} for encoder "
+                f"{self.encoder!r}; registered: "
+                f"{registry.backend_names(self.encoder)}"
+            )
 
     @property
     def resolved_class_binarize(self) -> str:
@@ -67,61 +120,38 @@ class HDCConfig:
         return "none" if self.encoder == "uhd" else "sign"
 
 
-def build_codebooks(cfg: HDCConfig) -> dict[str, jax.Array]:
-    """Generator tables: Sobol thresholds (uHD) or P/L hypervectors (baseline).
+# ---------------------------------------------------------------------------
+# Legacy functional API — deprecated shims over HDCModel
+# ---------------------------------------------------------------------------
 
-    For the baseline, `seed` selects the pseudo-random draw — the paper's
-    iteration index i maps to seed=i.
-    """
-    if cfg.encoder == "uhd":
-        table = sobol.sobol_table_for_features(
-            cfg.n_features, cfg.d, cfg.levels, seed=cfg.seed, skip=cfg.sobol_skip
-        )
-        # M-bit quantized thresholds are stored narrow (int8 here; the
-        # paper's BRAM packs them at M=4 bits) — compute promotes to i32
-        dtype = jnp.int8 if cfg.levels <= 127 else jnp.int32
-        return {"sobol": jnp.asarray(table, dtype)}
-    key = jax.random.PRNGKey(cfg.seed)
-    p, level = encoding.make_baseline_codebooks(key, cfg.n_features, cfg.d, cfg.levels)
-    return {"p": p, "level": level}
+
+def build_codebooks(cfg: HDCConfig) -> dict[str, jax.Array]:
+    """DEPRECATED: use ``HDCModel.create(cfg).codebooks``."""
+    _deprecated("build_codebooks(cfg)", "HDCModel.create(cfg)")
+    from repro.core import registry
+
+    return registry.get_encoder(cfg.encoder).build_codebooks(cfg)
 
 
 def encode(cfg: HDCConfig, books: dict[str, jax.Array], images: jax.Array) -> jax.Array:
-    """Images (B, H) in [0, max_intensity] -> non-binary HVs (B, D) int32."""
-    x_q = encoding.quantize_images(images, cfg.levels, cfg.max_intensity)
-    if cfg.encoder == "uhd":
-        if cfg.use_kernels:
-            from repro.kernels import ops  # local import: kernels are optional
+    """DEPRECATED: use ``HDCModel.encode(images)``."""
+    _deprecated("encode(cfg, books, images)", "HDCModel.encode(images)")
+    from repro.core.hdc_model import HDCModel
 
-            return ops.encode_bundle(x_q, books["sobol"])
-        if cfg.encode_impl == "unary_matmul":
-            return encoding.uhd_encode_unary_matmul(x_q, books["sobol"], cfg.levels)
-        if cfg.encode_impl == "naive":
-            return encoding.uhd_encode(x_q, books["sobol"])
-        return encoding.uhd_encode_blocked(x_q, books["sobol"])
-    return encoding.baseline_encode(x_q, books["p"], books["level"])
+    return HDCModel.from_parts(cfg, books).encode(images)
 
 
-def _query_hvs(cfg: HDCConfig, books, images):
-    hv = encode(cfg, books, images)
-    if cfg.binarize_query:
-        hv = encoding.binarize(hv).astype(jnp.int32)
-    return hv
-
-
-@partial(jax.jit, static_argnums=0)
 def fit(
     cfg: HDCConfig, books: dict[str, jax.Array], images: jax.Array, labels: jax.Array
 ) -> jax.Array:
-    """Single-pass training: encode -> bundle-by-class -> binarize.
+    """DEPRECATED: use ``HDCModel.fit(images, labels)``.
 
-    Returns class hypervectors (C, D) int32 (or int8 ±1 if binarized).
+    Returns class hypervectors (C, D) int32 per the binarization policy.
     """
-    hvs = encode(cfg, books, images)
-    class_hvs = encoding.bundle_by_class(hvs, labels, cfg.n_classes)
-    if cfg.resolved_class_binarize == "sign":
-        class_hvs = encoding.binarize(class_hvs).astype(jnp.int32)
-    return class_hvs
+    _deprecated("fit(cfg, books, ...)", "HDCModel.fit(images, labels)")
+    from repro.core.hdc_model import HDCModel
+
+    return HDCModel.from_parts(cfg, books).fit(images, labels).class_hvs
 
 
 def fit_streaming(
@@ -129,38 +159,24 @@ def fit_streaming(
     books: dict[str, jax.Array],
     batches: Any,
 ) -> jax.Array:
-    """Memory-bounded fit over an iterator of (images, labels) batches.
+    """DEPRECATED: use ``HDCModel.fit_batches(batches)``."""
+    _deprecated("fit_streaming(cfg, books, ...)", "HDCModel.fit_batches(batches)")
+    from repro.core.hdc_model import HDCModel
 
-    Accumulates raw class sums across batches, binarizes once at the end
-    — identical semantics to `fit` on the concatenated data.
-    """
-
-    @partial(jax.jit, static_argnums=0)
-    def step(cfg, books, acc, images, labels):
-        hvs = encode(cfg, books, images)
-        return acc + encoding.bundle_by_class(hvs, labels, cfg.n_classes)
-
-    acc = jnp.zeros((cfg.n_classes, cfg.d), jnp.int32)
-    for images, labels in batches:
-        acc = step(cfg, books, acc, jnp.asarray(images), jnp.asarray(labels))
-    if cfg.resolved_class_binarize == "sign":
-        return encoding.binarize(acc).astype(jnp.int32)
-    return acc
+    return HDCModel.from_parts(cfg, books).fit_batches(batches).class_hvs
 
 
-@partial(jax.jit, static_argnums=0)
 def predict(
     cfg: HDCConfig, books: dict[str, jax.Array], class_hvs: jax.Array, images: jax.Array
 ) -> jax.Array:
-    """Classify images: encode, similarity vs class HVs, argmax."""
-    q = _query_hvs(cfg, books, images)
-    if cfg.similarity == "hamming":
-        qw = unary.pack_hypervector(q)
-        cw = unary.pack_hypervector(class_hvs)
-        sim = metrics.hamming_similarity_packed(qw, cw, cfg.d).astype(jnp.float32)
-    else:
-        sim = metrics.SIMILARITIES[cfg.similarity](q, class_hvs)
-    return metrics.classify(sim)
+    """DEPRECATED: use ``HDCModel.predict(images)``."""
+    _deprecated("predict(cfg, books, class_hvs, ...)", "HDCModel.predict(images)")
+    from repro.core.hdc_model import HDCModel
+
+    # Re-binarization through the class_hvs property is idempotent, so
+    # passing an already-binarized array keeps the old semantics.
+    model = HDCModel.from_parts(cfg, books, class_sums=jnp.asarray(class_hvs))
+    return model.predict(images)
 
 
 def evaluate(
@@ -171,52 +187,23 @@ def evaluate(
     labels: jax.Array,
     batch_size: int = 1024,
 ) -> float:
-    """Test accuracy, evaluated in batches."""
-    n = images.shape[0]
-    correct = 0
-    for i in range(0, n, batch_size):
-        pred = predict(cfg, books, class_hvs, jnp.asarray(images[i : i + batch_size]))
-        correct += int((pred == jnp.asarray(labels[i : i + batch_size])).sum())
-    return correct / n
+    """DEPRECATED: use ``HDCModel.evaluate(images, labels)``."""
+    _deprecated("evaluate(cfg, books, ...)", "HDCModel.evaluate(images, labels)")
+    from repro.core.hdc_model import HDCModel
+
+    model = HDCModel.from_parts(cfg, books, class_sums=jnp.asarray(class_hvs))
+    return model.evaluate(images, labels, batch_size=batch_size)
 
 
-def train_and_eval(
-    cfg: HDCConfig,
-    train_images: np.ndarray,
-    train_labels: np.ndarray,
-    test_images: np.ndarray,
-    test_labels: np.ndarray,
-    batch_size: int = 2048,
-) -> float:
-    """Convenience end-to-end: build books, fit (streamed), evaluate."""
-    books = build_codebooks(cfg)
+def train_and_eval(*args, **kw) -> float:
+    """Convenience end-to-end — forwards to repro.core.hdc_model."""
+    from repro.core import hdc_model
 
-    def batches():
-        for i in range(0, len(train_images), batch_size):
-            yield train_images[i : i + batch_size], train_labels[i : i + batch_size]
-
-    class_hvs = fit_streaming(cfg, books, batches())
-    return evaluate(cfg, books, class_hvs, test_images, test_labels)
+    return hdc_model.train_and_eval(*args, **kw)
 
 
-def baseline_iterative_search(
-    base_cfg: HDCConfig,
-    train_images: np.ndarray,
-    train_labels: np.ndarray,
-    test_images: np.ndarray,
-    test_labels: np.ndarray,
-    iterations: int,
-    batch_size: int = 2048,
-) -> list[float]:
-    """The paper's baseline protocol: regenerate pseudo-random P/L per
-    iteration i, retrain, record test accuracy (Table IV / Fig. 6(a)).
-    """
-    accs = []
-    for i in range(iterations):
-        cfg = dataclasses.replace(base_cfg, encoder="baseline", seed=i)
-        accs.append(
-            train_and_eval(
-                cfg, train_images, train_labels, test_images, test_labels, batch_size
-            )
-        )
-    return accs
+def baseline_iterative_search(*args, **kw) -> list[float]:
+    """The paper's baseline protocol — forwards to repro.core.hdc_model."""
+    from repro.core import hdc_model
+
+    return hdc_model.baseline_iterative_search(*args, **kw)

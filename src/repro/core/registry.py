@@ -1,0 +1,219 @@
+"""Encoder/backend registries: the single dispatch point of the HDC stack.
+
+The paper describes a *family* of encoders (position-free Sobol/unary
+uHD, comparator-based baseline HDC) each with several equivalent
+datapaths (naive compare, blocked compare, MXU unary-matmul, fused
+Pallas kernels, and the bit-exact unary-comparator oracle).  This
+module makes both axes first-class:
+
+  * ``@register_encoder("uhd")`` registers an :class:`EncoderBase`
+    subclass.  An encoder owns its codebook pytree layout
+    (``build_codebooks``) and its table of backends.
+  * ``@register_backend("uhd", "pallas")`` registers one datapath for
+    one encoder.  A backend is a pure function
+    ``(cfg, codebooks, x_q) -> (B, D) int32`` over *quantized* inputs;
+    all backends of an encoder are exactly equivalent and tests
+    cross-check every one against the encoder's reference oracle.
+  * :func:`resolve_backend` is the only dispatch decision in the
+    codebase: it maps a requested backend name (or ``"auto"``) plus
+    the execution platform to a concrete registered backend, probing
+    capabilities (is Pallas importable? TPU native vs CPU interpret
+    mode?) and walking an explicit per-platform fallback order.
+
+Nothing outside this module branches on backend names — adding an
+encoder or a datapath is a registration, not an edit to ``if/elif``
+chains.  (The legacy ``HDCConfig.use_kernels`` / ``encode_impl`` flags
+are deprecation shims in :mod:`repro.core.model` that merely rewrite
+themselves into a backend name.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Callable, Protocol, runtime_checkable
+
+import jax
+
+if TYPE_CHECKING:  # only for annotations; avoids a model <-> registry cycle
+    from repro.core.model import HDCConfig
+
+BackendFn = Callable[..., jax.Array]  # (cfg, codebooks, x_q) -> (B, D) int32
+AvailabilityProbe = Callable[[str], bool]  # platform -> usable?
+
+
+@runtime_checkable
+class Encoder(Protocol):
+    """What a registered encoder must provide (the public protocol)."""
+
+    name: str
+
+    def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]: ...
+
+    def encode(
+        self, cfg: "HDCConfig", codebooks: dict[str, jax.Array], x_q: jax.Array,
+        *, backend: str = "auto",
+    ) -> jax.Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered datapath of one encoder."""
+
+    encoder: str
+    name: str
+    fn: BackendFn
+    available: AvailabilityProbe
+    doc: str = ""
+
+
+_ENCODERS: dict[str, "EncoderBase"] = {}
+_BACKENDS: dict[str, dict[str, BackendSpec]] = {}
+
+
+class BackendUnavailableError(RuntimeError):
+    """An explicitly requested backend cannot run on this platform."""
+
+
+class EncoderBase:
+    """Base class for registered encoders.
+
+    Subclasses set ``name``, ``reference_backend`` (the oracle every
+    other backend is tested against) and ``auto_order`` (per-platform
+    fallback order used by ``resolve_backend("auto", ...)``), and
+    implement ``build_codebooks``.  ``encode`` dispatches through the
+    backend table and is shared.
+    """
+
+    name: str = ""
+    reference_backend: str = "naive"
+    #: platform -> preference order; "default" is the fallback entry.
+    auto_order: dict[str, tuple[str, ...]] = {"default": ("naive",)}
+
+    def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def codebook_specs(self, cfg: "HDCConfig") -> dict[str, jax.ShapeDtypeStruct]:
+        """Shapes/dtypes of `build_codebooks` without materializing them
+        (used as the structural template for checkpoint restore).  The
+        default traces build_codebooks abstractly; encoders whose
+        generation runs on the host (e.g. numpy Sobol) should override.
+        """
+        return jax.eval_shape(lambda: self.build_codebooks(cfg))
+
+    def encode(
+        self, cfg: "HDCConfig", codebooks: dict[str, jax.Array], x_q: jax.Array,
+        *, backend: str = "auto",
+    ) -> jax.Array:
+        """Quantized features (B, H) -> non-binary hypervectors (B, D)."""
+        resolved = resolve_backend(backend, encoder=self.name)
+        return _BACKENDS[self.name][resolved].fn(cfg, codebooks, x_q)
+
+    def backends(self) -> tuple[str, ...]:
+        return tuple(sorted(_BACKENDS.get(self.name, {})))
+
+
+def register_encoder(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate and register an EncoderBase subclass."""
+
+    def deco(cls: type) -> type:
+        inst = cls()
+        inst.name = name
+        _ENCODERS[name] = inst
+        _BACKENDS.setdefault(name, {})
+        return cls
+
+    return deco
+
+
+def register_backend(
+    encoder: str, name: str, *, available: AvailabilityProbe | None = None
+) -> Callable[[BackendFn], BackendFn]:
+    """Function decorator: register one datapath for one encoder."""
+
+    def deco(fn: BackendFn) -> BackendFn:
+        doc_lines = (fn.__doc__ or "").strip().splitlines()
+        _BACKENDS.setdefault(encoder, {})[name] = BackendSpec(
+            encoder=encoder,
+            name=name,
+            fn=fn,
+            available=available or (lambda platform: True),
+            doc=doc_lines[0] if doc_lines else "",
+        )
+        return fn
+
+    return deco
+
+
+def _ensure_builtin() -> None:
+    """Import the built-in encoders on first registry access."""
+    if not _ENCODERS:
+        from repro.core import encoders  # noqa: F401  (registers on import)
+
+
+def get_encoder(name: str) -> EncoderBase:
+    _ensure_builtin()
+    try:
+        return _ENCODERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown encoder {name!r}; registered: {sorted(_ENCODERS)}"
+        ) from None
+
+
+def encoder_names() -> tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(sorted(_ENCODERS))
+
+
+def backend_names(encoder: str) -> tuple[str, ...]:
+    _ensure_builtin()
+    if encoder not in _BACKENDS:
+        raise ValueError(
+            f"unknown encoder {encoder!r}; registered: {sorted(_ENCODERS)}"
+        )
+    return tuple(sorted(_BACKENDS[encoder]))
+
+
+def resolve_backend(
+    name: str | None, platform: str | None = None, *, encoder: str = "uhd"
+) -> str:
+    """Map a requested backend name to a concrete registered backend.
+
+    ``name`` of ``None``/``"auto"`` walks the encoder's per-platform
+    preference order and returns the first backend whose capability
+    probe passes.  An explicit name is honoured exactly: unknown names
+    raise ``ValueError`` (listing the options), and a known-but-
+    unusable backend raises :class:`BackendUnavailableError` rather
+    than silently falling back.
+    """
+    _ensure_builtin()
+    platform = platform or jax.default_backend()
+    enc = get_encoder(encoder)
+    table = _BACKENDS[encoder]
+    if name is None or name == "auto":
+        order = enc.auto_order.get(platform, enc.auto_order["default"])
+        for cand in order:
+            spec = table.get(cand)
+            if spec is not None and spec.available(platform):
+                return cand
+        raise BackendUnavailableError(
+            f"no usable backend for encoder {encoder!r} on {platform!r} "
+            f"(tried {order})"
+        )
+    if name not in table:
+        raise ValueError(
+            f"unknown backend {name!r} for encoder {encoder!r}; "
+            f"registered: {sorted(table)}"
+        )
+    if not table[name].available(platform):
+        raise BackendUnavailableError(
+            f"backend {name!r} (encoder {encoder!r}) is not usable on "
+            f"platform {platform!r}"
+        )
+    return name
+
+
+def backend_table() -> dict[str, dict[str, BackendSpec]]:
+    """Read-only snapshot of the full registry (for docs/benchmarks)."""
+    _ensure_builtin()
+    return {e: dict(t) for e, t in _BACKENDS.items()}

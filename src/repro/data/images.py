@@ -17,6 +17,7 @@ import dataclasses
 import gzip
 import os
 import struct
+import zlib
 from pathlib import Path
 
 import numpy as np
@@ -81,7 +82,11 @@ def make_synthetic(
     name: str, n_train: int = 4096, n_test: int = 1024, seed: int = 0
 ) -> ImageDataset:
     side, n_classes, n_str, noise, jit, aj = _SYNTH_SPECS[name]
-    rng = np.random.default_rng(np.random.SeedSequence([hash(name) & 0x7FFFFFFF, seed]))
+    # zlib.crc32, not hash(): str hashes are randomized per process, and
+    # the dataset must be reproducible across runs (a checkpointed model
+    # evaluated in a new process has to see the same test split).
+    name_key = zlib.crc32(name.encode()) & 0x7FFFFFFF
+    rng = np.random.default_rng(np.random.SeedSequence([name_key, seed]))
     # class prototype = a fixed set of stroke anchor points
     protos = [
         rng.uniform(3, side - 3, size=(n_str + 1, 2)).astype(np.float32)

@@ -5,6 +5,10 @@ kernel (interpret=True automatically off-TPU so the whole framework
 runs/validates on CPU), and slices/corrects the result.  Semantics of
 op X match `repro.kernels.ref.X` exactly; tests enforce this across a
 shape/dtype sweep.
+
+These ops back the "pallas" backend registered in
+`repro.core.encoders` — model code reaches them via
+`HDCConfig(backend="pallas")`, never by importing this module directly.
 """
 
 from __future__ import annotations

@@ -69,6 +69,8 @@ def _lower(cfg, shape, inputs):
 
 def _cell_stats(compiled) -> dict:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns one dict per device
+        ca = ca[0] if ca else {}
     coll = roofline.collective_bytes(compiled.as_text())
     counts = coll.pop("_counts")
     return {
@@ -189,13 +191,13 @@ def run_cell(
 def run_hdc(multi_pod: bool = False, d: int = 8192, verbose: bool = True) -> dict:
     """Dry-run the paper's own system at scale: uHD single-pass fit over a
     globally sharded image batch (65536 images x 784 features)."""
-    from repro.core import HDCConfig, fit
+    from repro.core import HDCConfig, HDCModel, hdc_model
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     set_current_mesh(mesh)
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    cfg = HDCConfig(n_features=784, n_classes=16, d=d, encode_impl="unary_matmul")
+    cfg = HDCConfig(n_features=784, n_classes=16, d=d, backend="unary_matmul")
     batch_axes = ("pod", "data") if multi_pod else ("data",)
     images = jax.ShapeDtypeStruct(
         (65536, 784), jnp.float32, sharding=NamedSharding(mesh, P(batch_axes, None))
@@ -206,11 +208,10 @@ def run_hdc(multi_pod: bool = False, d: int = 8192, verbose: bool = True) -> dic
     sobol = jax.ShapeDtypeStruct(
         (784, d), jnp.int32, sharding=NamedSharding(mesh, P(None, "model"))
     )
+    model = HDCModel.from_parts(cfg, {"sobol": sobol})
     t0 = time.time()
     with mesh:
-        lowered = jax.jit(lambda b, i, l: fit(cfg, b, i, l)).lower(
-            {"sobol": sobol}, images, labels
-        )
+        lowered = hdc_model.fit.lower(model, images, labels)
         compiled = lowered.compile()
     rec = {
         "arch": "hdc_mnist", "shape": f"fit_65536xD{d}",

@@ -7,7 +7,18 @@ inside functions only.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # axis_types / AxisType only exist on newer jax
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -19,7 +30,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def mesh_for(n_devices: int | None = None, model_parallel: int = 16) -> Mesh:
@@ -30,9 +41,7 @@ def mesh_for(n_devices: int | None = None, model_parallel: int = 16) -> Mesh:
     while model > 1 and (n % model or (n // model) < 1):
         model //= 2
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def describe(mesh: Mesh) -> str:

@@ -1,7 +1,12 @@
 """The paper's system, end-to-end and sharded: uHD single-pass training.
 
     PYTHONPATH=src python -m repro.launch.train_hdc --dataset synth_mnist \
-        --d 8192 --compare-baseline
+        --d 8192 --backend auto --compare-baseline
+
+Built on the `HDCModel` API: create -> fit_batches (streamed) ->
+evaluate -> save.  The datapath is picked by name (--backend) through
+the encoder/backend registry; "auto" resolves per platform (Pallas on
+TPU, MXU-unary matmul elsewhere).
 
 Under a mesh the image batch shards over the batch axes and the class
 bundling reduces with one psum of (C, D) — the distributed form of the
@@ -11,13 +16,11 @@ paper's single-pass class-hypervector accumulation (DESIGN.md §3).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
-import jax
 import numpy as np
 
-from repro.core import HDCConfig, baseline_iterative_search, train_and_eval
+from repro.core import HDCConfig, HDCModel, backend_names, baseline_iterative_search
 from repro.data import load_dataset
 from repro.distributed.sharding import set_current_mesh
 from repro.launch.mesh import mesh_for
@@ -30,7 +33,13 @@ def main(argv=None) -> int:
     ap.add_argument("--levels", type=int, default=16)
     ap.add_argument("--n-train", type=int, default=4096)
     ap.add_argument("--n-test", type=int, default=1024)
-    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument(
+        "--backend", default="auto",
+        help=f"datapath: auto | {' | '.join(backend_names('uhd'))}",
+    )
+    ap.add_argument("--batch-size", type=int, default=2048)
+    ap.add_argument("--save-dir", default=None,
+                    help="checkpoint the trained HDCModel here")
     ap.add_argument("--compare-baseline", action="store_true")
     ap.add_argument("--baseline-iters", type=int, default=5)
     args = ap.parse_args(argv)
@@ -44,11 +53,27 @@ def main(argv=None) -> int:
 
     cfg = HDCConfig(
         n_features=ds.n_features, n_classes=ds.n_classes, d=args.d,
-        levels=args.levels, use_kernels=args.use_kernels,
+        levels=args.levels, backend=args.backend,
     )
+
+    def batches():
+        for i in range(0, len(ds.train_images), args.batch_size):
+            yield (ds.train_images[i : i + args.batch_size],
+                   ds.train_labels[i : i + args.batch_size])
+
     t0 = time.time()
-    acc = train_and_eval(cfg, ds.train_images, ds.train_labels, ds.test_images, ds.test_labels)
-    print(f"uHD  D={args.d}: accuracy {acc:.4f}  (single pass, {time.time()-t0:.1f}s)")
+    model = HDCModel.create(cfg).fit_batches(batches())
+    acc = model.evaluate(ds.test_images, ds.test_labels)
+    print(f"uHD  D={args.d} backend={args.backend}: accuracy {acc:.4f}  "
+          f"({int(model.n_seen)} images, single pass, {time.time()-t0:.1f}s)")
+
+    if args.save_dir:
+        model.save(args.save_dir, step=0)
+        restored = HDCModel.load(args.save_dir)
+        ok = restored.cfg == model.cfg and bool(
+            (restored.class_sums == model.class_sums).all()
+        )
+        print(f"checkpointed to {args.save_dir} (round-trip ok: {ok})")
 
     if args.compare_baseline:
         t0 = time.time()

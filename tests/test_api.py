@@ -1,0 +1,339 @@
+"""The registry + HDCModel public API (DESIGN.md §1-§2).
+
+Covers: every registered encoder x backend agrees with the encoder's
+reference oracle; resolve_backend dispatch/fallback/error behaviour;
+partial_fit == fit on concatenated batches; save/load round-trip;
+sharding mirrors; and the deprecation shims.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HDCConfig,
+    HDCModel,
+    BackendUnavailableError,
+    backend_names,
+    encoder_names,
+    get_encoder,
+    registry,
+    resolve_backend,
+)
+from repro.core import hdc_model as hm
+
+RNG = np.random.default_rng(7)
+
+
+def _cfg(**kw):
+    base = dict(n_features=24, n_classes=4, d=128, levels=16)
+    base.update(kw)
+    return HDCConfig(**base)
+
+
+def _data(cfg, n=20):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_registrations():
+    assert set(encoder_names()) >= {"uhd", "baseline"}
+    assert set(backend_names("uhd")) == {
+        "naive", "blocked", "unary_matmul", "pallas", "unary_oracle"
+    }
+    assert set(backend_names("baseline")) == {"naive", "unary_matmul"}
+
+
+@pytest.mark.parametrize("encoder", ["uhd", "baseline"])
+def test_every_backend_matches_reference_oracle(encoder):
+    """All registered datapaths of an encoder are exactly equivalent."""
+    cfg = _cfg(encoder=encoder)
+    model = HDCModel.create(cfg)
+    x, _ = _data(cfg, n=6)
+    enc = get_encoder(encoder)
+    ref = np.asarray(model.encode(x, backend=enc.reference_backend))
+    for backend in backend_names(encoder):
+        got = np.asarray(model.encode(x, backend=backend))
+        np.testing.assert_array_equal(got, ref, err_msg=f"{encoder}/{backend}")
+
+
+def test_resolve_backend_auto_orders():
+    # CPU/default: MXU-shaped matmul leads (interpret-mode pallas is slow)
+    assert resolve_backend("auto", "cpu") == "unary_matmul"
+    # TPU: the fused Pallas kernel leads (probe passes: kernels import)
+    assert resolve_backend("auto", "tpu") == "pallas"
+    assert resolve_backend(None, "cpu", encoder="baseline") == "unary_matmul"
+
+
+def test_resolve_backend_explicit_and_errors():
+    assert resolve_backend("naive", "cpu") == "naive"
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("nope", "cpu")
+    with pytest.raises(ValueError, match="unknown encoder"):
+        resolve_backend("naive", "cpu", encoder="nope")
+    # a uhd-only backend is not valid for the baseline encoder
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("pallas", "cpu", encoder="baseline")
+
+
+def test_resolve_backend_capability_fallback():
+    """An unavailable backend is skipped by auto and rejected explicitly."""
+
+    @registry.register_backend("uhd", "_always_off", available=lambda p: False)
+    def _off(cfg, books, x_q):  # pragma: no cover - never runs
+        raise AssertionError
+
+    try:
+        with pytest.raises(BackendUnavailableError):
+            resolve_backend("_always_off", "cpu")
+        assert resolve_backend("auto", "cpu") == "unary_matmul"
+    finally:
+        del registry._BACKENDS["uhd"]["_always_off"]
+
+
+def test_register_new_encoder_is_additive():
+    """Third-party encoders plug in without touching dispatch code."""
+
+    @registry.register_encoder("_toy")
+    class ToyEncoder(registry.EncoderBase):
+        reference_backend = "naive"
+        auto_order = {"default": ("naive",)}
+
+        def build_codebooks(self, cfg):
+            return {"w": jnp.ones((cfg.n_features, cfg.d), jnp.int32)}
+
+    @registry.register_backend("_toy", "naive")
+    def _toy_naive(cfg, books, x_q):
+        return x_q @ books["w"]
+
+    try:
+        cfg = _cfg(encoder="_toy")
+        model = HDCModel.create(cfg)
+        x, y = _data(cfg)
+        acc_model = model.fit(x, y)
+        assert acc_model.class_sums.shape == (cfg.n_classes, cfg.d)
+        assert int(acc_model.n_seen) == len(x)
+    finally:
+        del registry._ENCODERS["_toy"]
+        del registry._BACKENDS["_toy"]
+
+
+# ---------------------------------------------------------------------------
+# HDCModel
+# ---------------------------------------------------------------------------
+
+
+def test_model_is_a_jit_stable_pytree():
+    cfg = _cfg()
+    model = HDCModel.create(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(model)
+    assert all(hasattr(l, "shape") for l in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.cfg == cfg
+
+    calls = 0
+
+    @jax.jit
+    def touch(m):
+        nonlocal calls
+        calls += 1
+        return m.class_sums.sum()
+
+    touch(model)
+    touch(model.replace(n_seen=model.n_seen + 1))  # same treedef: no retrace
+    assert calls == 1
+
+
+def test_partial_fit_equals_fit_on_concatenation():
+    cfg = _cfg()
+    x, y = _data(cfg, n=30)
+    whole = HDCModel.create(cfg).fit(x, y)
+    stream = HDCModel.create(cfg)
+    for i in range(0, 30, 7):
+        stream = stream.partial_fit(x[i : i + 7], y[i : i + 7])
+    np.testing.assert_array_equal(
+        np.asarray(stream.class_sums), np.asarray(whole.class_sums)
+    )
+    assert int(stream.n_seen) == int(whole.n_seen) == 30
+    np.testing.assert_array_equal(
+        np.asarray(stream.predict(x)), np.asarray(whole.predict(x))
+    )
+
+
+def test_fit_batches_matches_fit():
+    cfg = _cfg(encoder="baseline")
+    x, y = _data(cfg, n=24)
+    whole = HDCModel.create(cfg).fit(x, y)
+    batched = HDCModel.create(cfg).fit_batches(
+        (x[i : i + 5], y[i : i + 5]) for i in range(0, 24, 5)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(batched.class_hvs), np.asarray(whole.class_hvs)
+    )
+
+
+@pytest.mark.parametrize("encoder", ["uhd", "baseline"])
+def test_save_load_roundtrip_identical_predictions(tmp_path, encoder):
+    cfg = _cfg(encoder=encoder)
+    x, y = _data(cfg, n=20)
+    model = HDCModel.create(cfg).fit(x, y)
+    model.save(tmp_path / "ckpt", step=3)
+    restored = HDCModel.load(tmp_path / "ckpt")
+    assert restored.cfg == cfg
+    assert int(restored.n_seen) == 20
+    np.testing.assert_array_equal(
+        np.asarray(restored.predict(x)), np.asarray(model.predict(x))
+    )
+
+
+def test_load_onto_mesh(tmp_path):
+    cfg = _cfg()
+    x, y = _data(cfg)
+    model = HDCModel.create(cfg).fit(x, y)
+    model.save(tmp_path / "ckpt")
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    restored = HDCModel.load(tmp_path / "ckpt", mesh=mesh)
+    np.testing.assert_array_equal(
+        np.asarray(restored.class_sums), np.asarray(model.class_sums)
+    )
+    spec = restored.class_sums.sharding.spec
+    assert tuple(spec) == (None, "model")
+
+
+def test_shardings_mirror():
+    cfg = _cfg()
+    model = HDCModel.create(cfg)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    sh = model.shardings(mesh)
+    assert tuple(sh.codebooks["sobol"].spec) == (None, "model")
+    assert tuple(sh.class_sums.spec) == (None, "model")
+    assert tuple(sh.n_seen.spec) == ()
+    sharded = model.shard(mesh)
+    np.testing.assert_array_equal(
+        np.asarray(sharded.class_sums), np.asarray(model.class_sums)
+    )
+
+
+def test_reset_drops_state_keeps_codebooks():
+    cfg = _cfg()
+    x, y = _data(cfg)
+    model = HDCModel.create(cfg).fit(x, y)
+    fresh = model.reset()
+    assert int(fresh.n_seen) == 0
+    assert not np.asarray(fresh.class_sums).any()
+    assert fresh.codebooks["sobol"] is model.codebooks["sobol"]
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_flags_map_to_backend():
+    with pytest.warns(DeprecationWarning):
+        cfg = _cfg(use_kernels=True)
+    assert cfg.backend == "pallas"
+    with pytest.warns(DeprecationWarning):
+        cfg = _cfg(encode_impl="naive")
+    assert cfg.backend == "naive"
+    # explicit backend wins over the legacy flags
+    with pytest.warns(DeprecationWarning):
+        cfg = _cfg(encode_impl="naive", backend="blocked")
+    assert cfg.backend == "blocked"
+
+
+def test_use_kernels_false_keeps_jnp_path():
+    """Old semantics: use_kernels=False never routes to Pallas, even where
+    auto would (TPU)."""
+    with pytest.warns(DeprecationWarning):
+        cfg = _cfg(use_kernels=False)
+    assert cfg.backend == "unary_matmul"
+    with pytest.warns(DeprecationWarning):
+        cfg = _cfg(use_kernels=False, encode_impl="blocked")
+    assert cfg.backend == "blocked"
+
+
+@pytest.mark.parametrize("encoder", ["uhd", "baseline"])
+def test_codebook_specs_match_built_codebooks(encoder):
+    cfg = _cfg(encoder=encoder)
+    enc = get_encoder(encoder)
+    built = enc.build_codebooks(cfg)
+    specs = enc.codebook_specs(cfg)
+    assert set(specs) == set(built)
+    for k in built:
+        assert specs[k].shape == built[k].shape, k
+        assert specs[k].dtype == built[k].dtype, k
+
+
+def test_checkpoint_from_deprecated_cfg_loads_cleanly(tmp_path):
+    """save() strips the legacy aliases, so load never re-warns."""
+    with pytest.warns(DeprecationWarning):
+        cfg = _cfg(encode_impl="naive")
+    x, y = _data(cfg)
+    HDCModel.create(cfg).fit(x, y).save(tmp_path / "ckpt")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        restored = HDCModel.load(tmp_path / "ckpt")
+    assert restored.cfg.backend == "naive"
+    assert restored.cfg.use_kernels is None
+
+
+def test_unknown_names_rejected():
+    with pytest.raises(ValueError, match="unknown encoder"):
+        _cfg(encoder="nope")
+    with pytest.raises(ValueError, match="unknown backend"):
+        _cfg(backend="nope")
+
+
+def test_functional_shims_forward_and_warn():
+    from repro.core import model as legacy
+
+    cfg = _cfg()
+    x, y = _data(cfg)
+    model = HDCModel.create(cfg)
+    with pytest.warns(DeprecationWarning):
+        books = legacy.build_codebooks(cfg)
+    with pytest.warns(DeprecationWarning):
+        class_hvs = legacy.fit(cfg, books, x, y)
+    np.testing.assert_array_equal(
+        np.asarray(class_hvs), np.asarray(model.fit(x, y).class_hvs)
+    )
+    with pytest.warns(DeprecationWarning):
+        pred = legacy.predict(cfg, books, class_hvs, x)
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(model.fit(x, y).predict(x)))
+    with pytest.warns(DeprecationWarning):
+        acc = legacy.evaluate(cfg, books, class_hvs, x, y)
+    assert acc == model.fit(x, y).evaluate(x, y)
+
+
+def test_train_and_eval_convenience_not_deprecated():
+    cfg = _cfg()
+    x, y = _data(cfg, n=40)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        acc = hm.train_and_eval(
+            cfg, np.asarray(x[:30]), np.asarray(y[:30]),
+            np.asarray(x[30:]), np.asarray(y[30:]), batch_size=16,
+        )
+    assert 0.0 <= acc <= 1.0
+
+
+def test_baseline_iterative_search_resets_backend():
+    """A uhd-only backend must not leak into the baseline retrains."""
+    cfg = dataclasses.replace(_cfg(), backend="pallas")
+    x, y = _data(cfg, n=24)
+    accs = hm.baseline_iterative_search(
+        cfg, np.asarray(x[:16]), np.asarray(y[:16]),
+        np.asarray(x[16:]), np.asarray(y[16:]), iterations=2, batch_size=16,
+    )
+    assert len(accs) == 2
