@@ -19,6 +19,7 @@ def main() -> int:
     from benchmarks import (
         perf_hdc,
         roofline_report,
+        serve_hdc,
         table1_runtime_memory,
         table2_energy_proxy,
         table3_efficiency,
@@ -41,6 +42,7 @@ def main() -> int:
         )),
         ("perf_hdc", lambda: perf_hdc.run(b=128 if args.fast else 256,
                                           d=2048 if args.fast else 4096)),
+        ("serve_hdc", lambda: serve_hdc.run(fast=args.fast)),
         ("roofline", lambda: roofline_report.run()),
     ]
     failures = 0

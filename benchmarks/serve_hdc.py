@@ -1,0 +1,109 @@
+"""Serving throughput: packed-hamming engine vs unpacked predict.
+
+Measures (a) the jitted engine datapath at several static batch sizes
+(img/s, and speedup over `HDCModel.predict` with the cosine similarity
+it replaces at serve time), and (b) the end-to-end micro-batcher with a
+one-image-at-a-time request stream (img/s, p50/p99 latency).  Emits the
+`BENCH_serve` artifact (artifacts/bench/BENCH_serve.json) consumed by
+CI so the serving-perf trajectory accumulates per commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench, save_artifact, table
+from repro.core import HDCConfig, HDCModel
+from repro.data import load_dataset
+from repro.serving import ModelRegistry, ServingEngine
+
+
+def run(fast: bool = False, d: int | None = None) -> dict:
+    d = d or (1024 if fast else 4096)
+    n_train = 512 if fast else 2048
+    stream_n = 128 if fast else 512
+    batches = (1, 8, 32) if fast else (1, 8, 32, 128)
+
+    ds = load_dataset("synth_mnist", n_train=n_train, n_test=max(batches))
+    cfg = HDCConfig(n_features=ds.n_features, n_classes=ds.n_classes, d=d)
+    ckpt = tempfile.mkdtemp(prefix="hdc_serve_bench_")
+    model = HDCModel.create(cfg).fit(ds.train_images, ds.train_labels)
+    model.save(ckpt, step=0)
+
+    rows, engine_stats = [], []
+    for b in batches:
+        engine = ServingEngine.from_checkpoint(ckpt, batch_size=b).warmup()
+        x = np.asarray(ds.test_images[:b], np.float32)
+        t_pack = bench(engine.predict, x)
+        t_ref = bench(lambda xx: model.predict(xx), x)
+        rows.append(
+            [b, f"{b / t_pack:.0f}", f"{t_pack * 1e3:.2f}",
+             f"{b / t_ref:.0f}", f"{t_ref / t_pack:.2f}x"]
+        )
+        engine_stats.append(
+            {"batch": b, "img_per_s": b / t_pack, "ms_per_batch": t_pack * 1e3,
+             "ref_img_per_s": b / t_ref, "speedup_vs_predict": t_ref / t_pack}
+        )
+    table(
+        f"serving datapath (D={d}, {jax.default_backend()}, impl="
+        f"{engine.impl})",
+        ["batch", "packed img/s", "ms/batch", "predict img/s", "speedup"],
+        rows,
+    )
+
+    # end-to-end: request stream through the continuous micro-batcher
+    registry = ModelRegistry()
+    batcher = registry.register_checkpoint(
+        "uhd", ckpt, batch_size=32, start=True
+    )
+    stream = np.asarray(
+        np.tile(ds.test_images, (stream_n // len(ds.test_images) + 1, 1))[:stream_n],
+        np.float32,
+    )
+    t0 = time.perf_counter()
+    futures = [batcher.submit(img) for img in stream]
+    for f in futures:
+        f.result(timeout=120.0)
+    wall = time.perf_counter() - t0
+    registry.stop_all()
+    snap = batcher.metrics.snapshot()
+    table(
+        "micro-batcher end-to-end (batch=32)",
+        ["requests", "img/s", "p50 ms", "p99 ms", "occupancy"],
+        [[stream_n, f"{stream_n / wall:.0f}", f"{snap['p50_ms']:.2f}",
+          f"{snap['p99_ms']:.2f}", f"{snap['batch_occupancy']:.2f}"]],
+    )
+
+    payload = {
+        "device": jax.default_backend(),
+        "d": d,
+        "impl": engine.impl,
+        "engine": engine_stats,
+        "batcher": {
+            "requests": stream_n,
+            "img_per_s": stream_n / wall,
+            **{k: snap[k] for k in
+               ("p50_ms", "p99_ms", "mean_ms", "batch_occupancy", "n_batches")},
+        },
+    }
+    save_artifact("BENCH_serve", payload)
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    ap.add_argument("--d", type=int, default=None)
+    args = ap.parse_args()
+    run(fast=args.fast, d=args.d)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

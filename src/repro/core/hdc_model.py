@@ -27,6 +27,7 @@ branches on encoder or backend names.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from pathlib import Path
 from typing import Any, Iterable
 
@@ -107,6 +108,21 @@ class HDCModel:
     @property
     def encoder(self) -> registry.EncoderBase:
         return registry.get_encoder(self.cfg.encoder)
+
+    def pack(self) -> jax.Array:
+        """Class HVs binarized (per `pack_center`) and packed 32 dims/word.
+
+        Returns (C, n_words(D)) uint32 — the pack-once serving artifact:
+        XOR + popcount against these words is the paper's entire
+        inference datapath (see `predict_packed` / repro.serving).
+        """
+        return unary.pack_hypervector(_centered(self.cfg, self.class_hvs))
+
+    def pack_queries(self, q: jax.Array) -> jax.Array:
+        """Encoded query HVs (B, D) -> packed sign bits (B, n_words(D)),
+        under the same centering policy as `pack` — hamming between the
+        two packings is the serving similarity."""
+        return unary.pack_hypervector(_centered(self.cfg, q))
 
     # -- core ops (delegate to the jitted module functions) --------------
 
@@ -291,6 +307,38 @@ def fit(model: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
     )
 
 
+def _centered(cfg: HDCConfig, hv: jax.Array) -> jax.Array:
+    """Apply the packed-inference centering policy before sign-packing.
+
+    "row" subtracts each hypervector's own mean over D (float32; the
+    sums involved stay well inside float32's exact-integer range for
+    repro-scale D/H/n).  Sign bits of the result are the packed
+    representation — see HDCConfig.pack_center.
+    """
+    if cfg.resolved_pack_center == "row":
+        x = hv.astype(jnp.float32)
+        return x - x.mean(-1, keepdims=True)
+    return hv
+
+
+def _packed_similarity(
+    q_words: jax.Array, c_words: jax.Array, d: int, impl: str
+) -> jax.Array:
+    """XOR+popcount scores (B, C) int32 via the named implementation.
+
+    "jnp" is the pure-JAX packed path (runs everywhere); "pallas" is the
+    fused kernel (native on TPU, interpret mode elsewhere).  Both are
+    bit-exact realizations of d - 2*popcount(q ^ c).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.hamming_packed(q_words, c_words, d)
+    if impl == "jnp":
+        return metrics.hamming_similarity_packed(q_words, c_words, d)
+    raise ValueError(f"unknown packed-similarity impl {impl!r}")
+
+
 @jax.jit
 def predict(model: HDCModel, images: jax.Array) -> jax.Array:
     """Encode queries, score against class HVs, argmax."""
@@ -300,11 +348,37 @@ def predict(model: HDCModel, images: jax.Array) -> jax.Array:
         q = encoding.binarize(q).astype(jnp.int32)
     class_hvs = model.class_hvs
     if cfg.similarity == "hamming":
-        qw = unary.pack_hypervector(q)
-        cw = unary.pack_hypervector(class_hvs)
-        sim = metrics.hamming_similarity_packed(qw, cw, cfg.d).astype(jnp.float32)
+        qw = model.pack_queries(q)
+        cw = model.pack()
+        sim = _packed_similarity(qw, cw, cfg.d, "jnp").astype(jnp.float32)
     else:
         sim = metrics.SIMILARITIES[cfg.similarity](q, class_hvs)
+    return metrics.classify(sim)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def predict_packed(
+    model: HDCModel,
+    images: jax.Array,
+    class_words: jax.Array,
+    *,
+    impl: str = "jnp",
+) -> jax.Array:
+    """Serving fast path: encode -> pack -> XOR+popcount -> argmax.
+
+    `class_words` is the pack-once artifact from :meth:`HDCModel.pack`,
+    so per-request work never touches the (C, D) class sums.  The
+    predicted labels are bit-identical to `predict` with
+    ``similarity="hamming"``: queries run through the same
+    `pack_queries` (encode, optional binarize, centering, sign bits)
+    and both `_packed_similarity` impls are bit-exact.
+    """
+    cfg = model.cfg
+    q = _encode(model, images)
+    if cfg.binarize_query:
+        q = encoding.binarize(q).astype(jnp.int32)
+    qw = model.pack_queries(q)
+    sim = _packed_similarity(qw, class_words, cfg.d, impl).astype(jnp.float32)
     return metrics.classify(sim)
 
 

@@ -66,6 +66,16 @@ class HDCConfig:
     class_binarize: str = "auto"  # "auto" | "sign" | "none"
     binarize_query: bool = False  # TOB-binarize query HVs (Fig. 5 datapath)
     similarity: str = "cosine"  # "cosine" | "dot" | "hamming"
+    # Packed-inference centering (DESIGN.md §6).  Plain sign-packing of
+    # uHD hypervectors collapses on sparse data: a per-example brightness
+    # common mode shifts every dimension uniformly (the same failure §5
+    # documents for class binarization).  "row" subtracts each vector's
+    # own mean over D before taking sign bits — the sign-domain analogue
+    # of cosine's per-vector normalization — and restores packed-hamming
+    # accuracy to the cosine level at large D.  "auto" resolves to "row"
+    # for uHD and "none" for the baseline (whose random position HVs
+    # already decorrelate the common mode).
+    pack_center: str = "auto"  # "auto" | "row" | "none"
     # Datapath by name, resolved via registry.resolve_backend: "auto"
     # walks the encoder's per-platform fallback order; explicit names
     # ("naive" | "blocked" | "unary_matmul" | "pallas" | "unary_oracle"
@@ -82,6 +92,8 @@ class HDCConfig:
             raise ValueError("levels must be a power of two")
         if self.class_binarize not in ("auto", "sign", "none"):
             raise ValueError(f"unknown class_binarize {self.class_binarize!r}")
+        if self.pack_center not in ("auto", "row", "none"):
+            raise ValueError(f"unknown pack_center {self.pack_center!r}")
         # Deprecation shim: map the legacy flags onto a backend name.
         if self.use_kernels is not None or self.encode_impl is not None:
             warnings.warn(
@@ -118,6 +130,12 @@ class HDCConfig:
         if self.class_binarize != "auto":
             return self.class_binarize
         return "none" if self.encoder == "uhd" else "sign"
+
+    @property
+    def resolved_pack_center(self) -> str:
+        if self.pack_center != "auto":
+            return self.pack_center
+        return "row" if self.encoder == "uhd" else "none"
 
 
 # ---------------------------------------------------------------------------

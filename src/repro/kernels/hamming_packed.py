@@ -27,6 +27,10 @@ def _hamming_kernel(q_ref, c_ref, o_ref, *, d: int):
     o_ref[...] = d - 2 * pc
 
 
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
 def hamming_packed_pallas(
     q_words: jax.Array,
     c_words: jax.Array,
@@ -36,20 +40,30 @@ def hamming_packed_pallas(
     block_c: int = 8,
     interpret: bool = False,
 ) -> jax.Array:
-    """q: (B, W) uint32, c: (C, W) uint32 -> (B, C) int32 scores."""
+    """q: (B, W) uint32, c: (C, W) uint32 -> (B, C) int32 scores.
+
+    B and C may be arbitrary (a serving request batch, C=10 classes):
+    operands are zero-padded up to the block grid and the result is
+    sliced back — padded rows cost grid cells but never leak scores.
+    """
     b, w = q_words.shape
     c, w2 = c_words.shape
     assert w == w2
-    assert b % block_b == 0 and c % block_c == 0
+    bp, cp = round_up(b, block_b), round_up(c, block_c)
+    if bp != b:
+        q_words = jnp.pad(q_words, ((0, bp - b), (0, 0)))
+    if cp != c:
+        c_words = jnp.pad(c_words, ((0, cp - c), (0, 0)))
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_hamming_kernel, d=d),
-        grid=(b // block_b, c // block_c),
+        grid=(bp // block_b, cp // block_c),
         in_specs=[
             pl.BlockSpec((block_b, w), lambda i, j: (i, 0)),
             pl.BlockSpec((block_c, w), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((bp, cp), jnp.int32),
         interpret=interpret,
     )(q_words, c_words)
+    return out[:b, :c]

@@ -28,15 +28,11 @@ from repro.kernels.encode_bundle import (
     encode_bundle_pallas,
 )
 from repro.kernels.encode_unary_mxu import encode_unary_mxu_pallas
-from repro.kernels.hamming_packed import hamming_packed_pallas
+from repro.kernels.hamming_packed import hamming_packed_pallas, round_up as _round_up
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def _pick_block(n: int, target: int) -> int:
@@ -192,15 +188,10 @@ def hamming_packed(
     """Packed ±1 similarity. (B,W),(C,W) uint32 -> (B,C) int32."""
     if interpret is None:
         interpret = _interpret_default()
-    b, w = q_words.shape
-    c = c_words.shape[0]
-    bp, cp = _round_up(b, block_b), _round_up(c, block_c)
-    qp = jnp.pad(q_words, ((0, bp - b), (0, 0)))
-    cpad = jnp.pad(c_words, ((0, cp - c), (0, 0)))
-    out = hamming_packed_pallas(
-        qp, cpad, d, block_b=block_b, block_c=block_c, interpret=interpret
+    # padding to the block grid happens inside hamming_packed_pallas
+    return hamming_packed_pallas(
+        q_words, c_words, d, block_b=block_b, block_c=block_c, interpret=interpret
     )
-    return out[:b, :c]
 
 
 __all__ = [

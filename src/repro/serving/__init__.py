@@ -1,0 +1,20 @@
+"""repro.serving — packed-hypervector HDC inference service.
+
+The serving layer of the repro (DESIGN.md §6): checkpointed `HDCModel`s
+are packed once into uint32 class words and served through a jitted
+XOR+popcount datapath behind a slot-based continuous micro-batcher,
+with a multi-model registry that hot-reloads newer checkpoint steps
+without dropping queued requests.
+
+    engine   = ServingEngine.from_checkpoint("ckpt/", batch_size=64)
+    registry = ModelRegistry()
+    batcher  = registry.register("uhd", engine.warmup(), start=True)
+    label    = batcher.submit(image).result(timeout=1.0)
+
+CLI driver: ``python -m repro.launch.serve_hdc --smoke``.
+"""
+
+from repro.serving.batcher import MicroBatcher, ServingFuture  # noqa: F401
+from repro.serving.engine import ServingEngine, resolve_impl  # noqa: F401
+from repro.serving.metrics import ServingMetrics  # noqa: F401
+from repro.serving.registry import ModelRegistry  # noqa: F401

@@ -1,0 +1,227 @@
+"""Slot-based continuous micro-batching for HDC inference.
+
+The HDC analogue of `serve_queue` in `repro.launch.serve`: requests
+arrive one image at a time, the device wants one static batch shape.
+The batcher keeps a FIFO of pending requests and a drain loop that
+
+  * takes up to ``engine.batch_size`` requests per step (after a short
+    coalescing window so sparse traffic still forms fuller batches),
+  * pads the partial batch with zero rows up to the static slot count —
+    padded rows are masked out on delivery, never returned — so the
+    jitted predict path compiles exactly once and never retraces on a
+    variable-size request stream,
+  * delivers each request's label through its :class:`ServingFuture`.
+
+Unlike the transformer server there is no multi-step decode state, so
+"continuous" batching degenerates to the pleasant case: every drain
+step is a fresh batch and slot refill is just taking the next requests
+off the queue.
+
+The engine reference is read once per drain step under the lock —
+:meth:`swap_engine` (the hot-reload path) therefore never drops queued
+requests: whatever is still in the FIFO is simply served by the new
+engine on the next step, while an in-flight batch finishes on the old
+one.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+import numpy as np
+
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import ServingMetrics
+
+
+class ServingFuture:
+    """Handle for one queued request; resolves to an int label."""
+
+    __slots__ = ("_event", "_label", "_error", "t_submit", "t_done")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._label: int | None = None
+        self._error: BaseException | None = None
+        self.t_submit = time.perf_counter()
+        self.t_done: float | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> int:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._label  # type: ignore[return-value]
+
+    def latency_s(self) -> float:
+        assert self.t_done is not None, "request not finished"
+        return self.t_done - self.t_submit
+
+    def _resolve(self, label: int | None, error: BaseException | None = None):
+        self.t_done = time.perf_counter()
+        self._label, self._error = label, error
+        self._event.set()
+
+
+class MicroBatcher:
+    """Pad-and-mask micro-batcher over one :class:`ServingEngine`."""
+
+    def __init__(
+        self,
+        engine: ServingEngine,
+        *,
+        max_delay_ms: float = 2.0,
+        metrics: ServingMetrics | None = None,
+    ):
+        self.engine = engine
+        self.max_delay_s = max_delay_ms / 1e3
+        self.metrics = metrics or ServingMetrics()
+        self._queue: collections.deque[tuple[np.ndarray, ServingFuture]] = (
+            collections.deque()
+        )
+        self._cv = threading.Condition()
+        self._thread: threading.Thread | None = None
+        self._running = False
+        self._closed = False  # set by stop(); submits are rejected after
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, image) -> ServingFuture:
+        """Queue one (H,) image; returns a future resolving to its label."""
+        image = np.asarray(image, np.float32)
+        if image.ndim != 1:
+            raise ValueError(f"submit takes one (H,) image, got {image.shape}")
+        fut = ServingFuture()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("batcher is stopped; request rejected")
+            self._queue.append((image, fut))
+            self.metrics.enqueued()
+            self._cv.notify_all()
+        return fut
+
+    def submit_many(self, images) -> list[ServingFuture]:
+        return [self.submit(img) for img in np.asarray(images, np.float32)]
+
+    def swap_engine(self, engine: ServingEngine) -> None:
+        """Atomically replace the engine (hot reload).  Queued requests
+        are kept and served by the new engine from the next drain step."""
+        with self._cv:
+            self.engine = engine
+            self.metrics.observe_reload()
+            self._cv.notify_all()
+
+    def queue_depth(self) -> int:
+        with self._cv:
+            return len(self._queue)
+
+    # -- draining ----------------------------------------------------------
+
+    def _take_batch(self) -> tuple[ServingEngine, list[tuple[np.ndarray, ServingFuture]]]:
+        """Pop up to batch_size requests + the engine to serve them with.
+        Caller must hold the lock; returns an empty list if idle."""
+        engine = self.engine
+        n = min(len(self._queue), engine.batch_size)
+        return engine, [self._queue.popleft() for _ in range(n)]
+
+    def _run_batch(
+        self,
+        engine: ServingEngine,
+        taken: list[tuple[np.ndarray, ServingFuture]],
+    ) -> None:
+        slots = engine.batch_size
+        h = engine.model.cfg.n_features
+        batch = np.zeros((slots, h), np.float32)  # pad rows stay zero
+        for i, (image, _) in enumerate(taken):
+            batch[i] = image
+        self.metrics.observe_batch(len(taken), slots)
+        try:
+            labels = engine.predict(batch)
+        except Exception as e:  # deliver the failure, keep serving
+            for _, fut in taken:
+                fut._resolve(None, e)
+                self.metrics.observe_request(0.0, error=True)
+            return
+        for i, (_, fut) in enumerate(taken):
+            fut._resolve(int(labels[i]))
+            self.metrics.observe_request(fut.latency_s())
+
+    def step(self) -> int:
+        """Serve one micro-batch synchronously; returns requests served."""
+        with self._cv:
+            engine, taken = self._take_batch()
+        if taken:
+            self._run_batch(engine, taken)
+        return len(taken)
+
+    def flush(self) -> int:
+        """Drain the whole queue synchronously (no thread required)."""
+        total = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return total
+            total += n
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                while self._running and not self._queue:
+                    self._cv.wait(0.05)
+                if not self._running and not self._queue:
+                    return
+                # coalescing window: give a trickle of traffic a chance
+                # to fill more slots before paying a device launch (loop
+                # on a deadline — each submit notifies the condition, so
+                # a single wait would collapse on the first arrival)
+                deadline = time.perf_counter() + self.max_delay_s
+                while (
+                    self._running
+                    and len(self._queue) < self.engine.batch_size
+                ):
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(remaining)
+                engine, taken = self._take_batch()
+            if taken:
+                self._run_batch(engine, taken)
+
+    def start(self) -> "MicroBatcher":
+        """Start the background drain thread (idempotent; reopens a
+        stopped batcher)."""
+        with self._cv:
+            if self._running:
+                return self
+            self._running = True
+            self._closed = False
+        self._thread = threading.Thread(
+            target=self._drain_loop, name="hdc-serve-drain", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Stop the drain thread; with `drain`, serve what is queued first."""
+        with self._cv:
+            self._running = False
+            self._closed = True
+            if not drain:
+                pending = list(self._queue)
+                self._queue.clear()
+                self.metrics.dropped(len(pending))
+                for _, fut in pending:
+                    fut._resolve(None, RuntimeError("server stopped"))
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if drain:
+            # a never-started (or already-joined) batcher still honours
+            # the drain promise: serve whatever is left synchronously
+            self.flush()

@@ -1,0 +1,131 @@
+"""`ServingEngine`: the pack-once packed-hamming inference unit.
+
+The paper's serving story (contributions 3/4): once class hypervectors
+are binarized, classification is XOR + popcount over uint32 words.  The
+engine does all the expensive work exactly once at load time —
+
+  * restore an `HDCModel` from a checkpoint step,
+  * binarize + bit-pack the (C, D) class sums into (C, D/32) uint32
+    words (`HDCModel.pack`),
+
+— and after that every request batch runs one jitted
+``encode -> pack -> XOR+popcount -> argmax`` call
+(:func:`repro.core.hdc_model.predict_packed`).  The similarity
+implementation is picked per platform: the fused Pallas kernel natively
+on TPU, the pure-JAX packed path elsewhere (interpret-mode Pallas is
+correct but orders of magnitude slower than XLA on CPU).  Both are
+bit-exact, and tests pin the engine's labels to
+``HDCModel.predict`` with ``similarity="hamming"`` for every registered
+uHD backend.
+
+Engines are immutable once built — hot reload (`repro.serving.registry`)
+builds a fresh engine from a newer step and swaps the reference, so an
+in-flight batch on the old engine is never disturbed.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hdc_model
+from repro.core.hdc_model import HDCModel
+
+
+def resolve_impl(impl: str = "auto", platform: str | None = None) -> str:
+    """Packed-similarity implementation for this platform.
+
+    "auto" -> "pallas" on TPU (native kernel), "jnp" elsewhere.
+    Explicit names are honoured exactly (ValueError on unknown).
+    """
+    if impl == "auto":
+        platform = platform or jax.default_backend()
+        return "pallas" if platform == "tpu" else "jnp"
+    if impl not in ("pallas", "jnp"):
+        raise ValueError(f"unknown packed-similarity impl {impl!r}")
+    return impl
+
+
+class ServingEngine:
+    """One loaded model, packed for inference, behind a jitted predict."""
+
+    def __init__(
+        self,
+        model: HDCModel,
+        *,
+        batch_size: int = 64,
+        impl: str = "auto",
+        step: int | None = None,
+        source: str | Path | None = None,
+    ):
+        self.model = model
+        self.batch_size = int(batch_size)
+        self.impl = resolve_impl(impl)
+        self.step = step
+        self.source = Path(source) if source is not None else None
+        # pack ONCE at load: (C, D/32) uint32 — per-request work never
+        # touches the int32 class sums again
+        self.class_words = jax.block_until_ready(model.pack())
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        path: str | Path,
+        *,
+        step: int | None = None,
+        batch_size: int = 64,
+        impl: str = "auto",
+    ) -> "ServingEngine":
+        """Load a checkpointed `HDCModel` (latest step by default) and
+        pack it for serving.  `step` pins an exact step — the hot-reload
+        path uses this to load the step it decided to promote."""
+        from repro.checkpoint.manager import CheckpointManager
+
+        if step is None:
+            step = CheckpointManager(path).latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {path}")
+        model = HDCModel.load(path, step=step)
+        return cls(model, batch_size=batch_size, impl=impl, step=step, source=path)
+
+    # -- inference --------------------------------------------------------
+
+    def predict(self, images) -> np.ndarray:
+        """(B, H) raw images -> (B,) int32 labels (host numpy).
+
+        Shape-polymorphic but retraces per distinct B — the batcher
+        always sends `batch_size` rows so steady-state traffic compiles
+        exactly once.
+        """
+        labels = hdc_model.predict_packed(
+            self.model, jnp.asarray(images), self.class_words, impl=self.impl
+        )
+        return np.asarray(labels)
+
+    def warmup(self) -> "ServingEngine":
+        """Compile the static-shape serving path before taking traffic."""
+        dummy = jnp.zeros((self.batch_size, self.model.cfg.n_features), jnp.float32)
+        jax.block_until_ready(
+            hdc_model.predict_packed(
+                self.model, dummy, self.class_words, impl=self.impl
+            )
+        )
+        return self
+
+    def describe(self) -> dict:
+        cfg = self.model.cfg
+        return {
+            "encoder": cfg.encoder,
+            "d": cfg.d,
+            "n_classes": cfg.n_classes,
+            "impl": self.impl,
+            "batch_size": self.batch_size,
+            "step": self.step,
+            "source": str(self.source) if self.source else None,
+            "n_seen": int(self.model.n_seen),
+            "packed_bytes": int(self.class_words.size * 4),
+        }

@@ -1,0 +1,118 @@
+"""Serving-side observability: request latency, throughput, queue depth.
+
+One `ServingMetrics` instance rides with each micro-batcher.  All
+mutators are thread-safe (the drain thread and submitter threads update
+concurrently); latencies are kept in a bounded window so a long-lived
+server never grows unbounded state.  `snapshot()` is the only read API
+— a plain dict suitable for logging, the smoke CLI, and the benchmark
+artifact.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+import numpy as np
+
+
+class ServingMetrics:
+    """Counters + bounded latency reservoir for one serving queue."""
+
+    def __init__(self, window: int = 16384):
+        self._lock = threading.Lock()
+        self._latency_s = collections.deque(maxlen=window)
+        self._t0 = time.perf_counter()
+        self._t_first: float | None = None  # first/last request completion:
+        self._t_last: float | None = None  # throughput excludes idle time
+        self.n_requests = 0  # requests completed
+        self.n_batches = 0  # device batches launched
+        self.n_slots = 0  # total slots across launched batches
+        self.n_padded = 0  # slots that carried padding, not a request
+        self.n_errors = 0  # requests failed with an exception
+        self.n_reloads = 0  # hot engine swaps observed
+        self.queue_depth = 0  # requests currently waiting (gauge)
+
+    # -- mutators (called from batcher/registry threads) -----------------
+
+    def enqueued(self, n: int = 1) -> None:
+        with self._lock:
+            self.queue_depth += n
+
+    def dropped(self, n: int) -> None:
+        """Requests removed from the queue without being served."""
+        with self._lock:
+            self.queue_depth = max(0, self.queue_depth - n)
+
+    def observe_batch(self, n_real: int, n_slots: int) -> None:
+        with self._lock:
+            self.n_batches += 1
+            self.n_slots += n_slots
+            self.n_padded += n_slots - n_real
+            self.queue_depth = max(0, self.queue_depth - n_real)
+
+    def observe_request(self, latency_s: float, *, error: bool = False) -> None:
+        with self._lock:
+            now = time.perf_counter()
+            if self._t_first is None:
+                self._t_first = now
+            self._t_last = now
+            self.n_requests += 1
+            if error:
+                self.n_errors += 1
+            else:
+                self._latency_s.append(latency_s)
+
+    def observe_reload(self) -> None:
+        with self._lock:
+            self.n_reloads += 1
+
+    # -- reads ------------------------------------------------------------
+
+    def latency_percentiles_ms(
+        self, ps: tuple[float, ...] = (50.0, 99.0)
+    ) -> dict[str, float]:
+        with self._lock:
+            lat = np.asarray(self._latency_s, np.float64)
+        if lat.size == 0:
+            return {f"p{p:g}_ms": float("nan") for p in ps}
+        return {f"p{p:g}_ms": float(np.percentile(lat, p) * 1e3) for p in ps}
+
+    def snapshot(self) -> dict:
+        """Point-in-time view: counts, occupancy, p50/p99, req/s.
+
+        `throughput_rps` spans first-to-last request completion (idle
+        and setup time before/after traffic don't dilute it);
+        `elapsed_s` is total time since construction.
+        """
+        with self._lock:
+            elapsed = time.perf_counter() - self._t0
+            window = (
+                self._t_last - self._t_first
+                if self._t_first is not None
+                else 0.0
+            )
+            lat = np.asarray(self._latency_s, np.float64)
+            out = {
+                "n_requests": self.n_requests,
+                "n_batches": self.n_batches,
+                "n_errors": self.n_errors,
+                "n_reloads": self.n_reloads,
+                "queue_depth": self.queue_depth,
+                "batch_occupancy": (
+                    (self.n_slots - self.n_padded) / self.n_slots
+                    if self.n_slots
+                    else float("nan")
+                ),
+                "elapsed_s": elapsed,
+                "throughput_rps": (
+                    self.n_requests / window if window > 0 else float("nan")
+                ),
+            }
+        for p in (50.0, 90.0, 99.0):
+            out[f"p{p:g}_ms"] = (
+                float(np.percentile(lat, p) * 1e3) if lat.size else float("nan")
+            )
+        out["mean_ms"] = float(lat.mean() * 1e3) if lat.size else float("nan")
+        return out

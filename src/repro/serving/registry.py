@@ -1,0 +1,138 @@
+"""Multi-model serving registry with hot checkpoint reload.
+
+One process serves many named models (several D/encoder variants of the
+paper's classifier, A/B steps of the same model, ...).  Each entry is a
+micro-batcher wrapping its live engine; `hot_reload` watches the checkpoint
+directory and, when the trainer has published a newer step, builds a
+fresh packed engine, warms its jit cache, and swaps it into the batcher
+atomically.
+
+Hot-reload contract (pinned by tests/test_serving.py):
+
+  * queued requests are never dropped — the batcher keeps its FIFO and
+    serves the remainder with the new engine;
+  * an in-flight batch finishes on the old engine (engines are
+    immutable; the swap only changes which engine the *next* drain step
+    picks up);
+  * the swap itself is cheap: `predict_packed` is already compiled for
+    the same static shapes, so the new engine's warmup is a cache hit.
+"""
+
+from __future__ import annotations
+
+import threading
+from pathlib import Path
+
+from repro.serving.batcher import MicroBatcher, ServingFuture
+from repro.serving.engine import ServingEngine
+
+
+class ModelRegistry:
+    """name -> live micro-batcher; the process-level serving map.
+
+    The batcher is the single source of truth for which engine is live
+    (`batcher.engine`, swapped atomically under its condition lock) —
+    the registry never holds a second engine reference that could skew
+    from what the drain loop actually serves.
+    """
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._entries: dict[str, MicroBatcher] = {}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def register(
+        self,
+        name: str,
+        engine: ServingEngine,
+        *,
+        max_delay_ms: float = 2.0,
+        start: bool = False,
+    ) -> MicroBatcher:
+        """Put a model behind a name; returns its micro-batcher."""
+        with self._lock:
+            if name in self._entries:
+                raise ValueError(f"model {name!r} already registered")
+            batcher = MicroBatcher(engine, max_delay_ms=max_delay_ms)
+            self._entries[name] = batcher
+        if start:
+            batcher.start()
+        return batcher
+
+    def register_checkpoint(
+        self,
+        name: str,
+        path: str | Path,
+        *,
+        step: int | None = None,
+        batch_size: int = 64,
+        impl: str = "auto",
+        max_delay_ms: float = 2.0,
+        start: bool = False,
+    ) -> MicroBatcher:
+        """Load-and-register in one call (the common server boot path)."""
+        engine = ServingEngine.from_checkpoint(
+            path, step=step, batch_size=batch_size, impl=impl
+        ).warmup()
+        return self.register(name, engine, max_delay_ms=max_delay_ms, start=start)
+
+    def unregister(self, name: str, *, drain: bool = True) -> None:
+        with self._lock:
+            batcher = self._entries.pop(name)
+        batcher.stop(drain=drain)
+
+    def stop_all(self, *, drain: bool = True) -> None:
+        for name in self.names():
+            self.unregister(name, drain=drain)
+
+    # -- lookup ------------------------------------------------------------
+
+    def names(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._entries))
+
+    def engine(self, name: str) -> ServingEngine:
+        return self.batcher(name).engine
+
+    def batcher(self, name: str) -> MicroBatcher:
+        with self._lock:
+            try:
+                return self._entries[name]
+            except KeyError:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {sorted(self._entries)}"
+                ) from None
+
+    def submit(self, name: str, image) -> ServingFuture:
+        """Queue one request against a named model."""
+        return self.batcher(name).submit(image)
+
+    def describe(self) -> dict[str, dict]:
+        return {name: self.engine(name).describe() for name in self.names()}
+
+    # -- hot reload --------------------------------------------------------
+
+    def hot_reload(self, name: str, *, step: int | None = None) -> int | None:
+        """Swap `name` to a newer checkpoint step without dropping queued
+        requests.  Returns the step swapped to, or None if the entry is
+        already at the newest published step.  `step` forces an exact
+        step (including rollback to an older one)."""
+        batcher = self.batcher(name)
+        old = batcher.engine
+        if old.source is None:
+            raise ValueError(
+                f"model {name!r} was not loaded from a checkpoint; "
+                "hot reload needs a source directory"
+            )
+        if step is None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            step = CheckpointManager(old.source).poll_latest(after=old.step)
+            if step is None:
+                return None
+        engine = ServingEngine.from_checkpoint(
+            old.source, step=step, batch_size=old.batch_size, impl=old.impl
+        ).warmup()  # jit-cache hit: same static shapes as the old engine
+        batcher.swap_engine(engine)
+        return step

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import HDCConfig, build_codebooks, encoding, fit, model, sobol
+from repro.core import HDCConfig, HDCModel, encoding, sobol
 
 
 @pytest.fixture(scope="module")
@@ -87,8 +87,7 @@ def test_uhd_sign_binarize_collapses_on_sparse_data():
         n_features=ds.n_features, n_classes=ds.n_classes, d=512,
         class_binarize="sign",
     )
-    books = build_codebooks(cfg)
-    class_hvs = fit(cfg, books, jnp.asarray(ds.train_images), jnp.asarray(ds.train_labels))
+    class_hvs = HDCModel.create(cfg).fit(ds.train_images, ds.train_labels).class_hvs
     collapse = float(jnp.abs(jnp.asarray(class_hvs, jnp.float32).mean(0)).mean())
     assert collapse > 0.9  # nearly all classes share the same sign pattern
 

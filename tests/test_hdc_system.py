@@ -59,19 +59,17 @@ def test_baseline_fluctuates_across_draws(ds):
 
 
 def test_streaming_fit_matches_batch_fit(ds):
-    import jax.numpy as jnp
-
-    from repro.core import build_codebooks, evaluate, fit, fit_streaming
+    from repro.core import HDCModel
 
     cfg = _cfg(ds, d=512)
-    books = build_codebooks(cfg)
-    full = fit(cfg, books, jnp.asarray(ds.train_images), jnp.asarray(ds.train_labels))
+    model = HDCModel.create(cfg)
+    full = model.fit(ds.train_images, ds.train_labels).class_hvs
 
     def batches():
         for i in range(0, len(ds.train_images), 100):
             yield ds.train_images[i : i + 100], ds.train_labels[i : i + 100]
 
-    stream = fit_streaming(cfg, books, batches())
+    stream = model.fit_batches(batches()).class_hvs
     assert bool((full == stream).all())
 
 

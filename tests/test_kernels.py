@@ -84,14 +84,49 @@ def test_hamming_packed_kernel(b, c, d):
     np.testing.assert_array_equal(np.asarray(got), qv @ cv.T)
 
 
-def test_kernel_in_model_path():
-    """HDCConfig(use_kernels=True) routes through the Pallas encode."""
-    from repro.core import HDCConfig, build_codebooks, encode
+@pytest.mark.parametrize("b,c", [(5, 10), (1, 3), (129, 9), (128, 8)])
+def test_hamming_packed_pallas_arbitrary_grid(b, c):
+    """The kernel itself pads B/C to the block grid (serving needs
+    request batches and class counts that don't divide the blocks)."""
+    from repro.kernels.hamming_packed import hamming_packed_pallas
 
-    cfg = HDCConfig(n_features=49, n_classes=4, d=256, use_kernels=True)
-    books = build_codebooks(cfg)
+    d = 96
+    q = jnp.asarray(RNG.integers(-3, 4, (b, d)), jnp.int32)
+    cl = jnp.asarray(RNG.integers(-3, 4, (c, d)), jnp.int32)
+    qw, cw = unary.pack_hypervector(q), unary.pack_hypervector(cl)
+    got = hamming_packed_pallas(qw, cw, d, interpret=True)
+    assert got.shape == (b, c)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.hamming_packed(qw, cw, d)))
+
+
+def test_packed_similarity_random_d_sweep():
+    """Seeded sweep of the serving-path property (also a hypothesis test
+    in tests/test_unary.py): packed XOR+popcount == ±1 integer dot for
+    random D including D % 32 != 0, on both similarity impls."""
+    from repro.core import metrics
+
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        b, c = int(rng.integers(1, 7)), int(rng.integers(1, 12))
+        d = int(rng.integers(1, 100))  # hits non-multiples of 32
+        q = rng.integers(-7, 8, (b, d))
+        cl = rng.integers(-7, 8, (c, d))
+        qw = unary.pack_hypervector(jnp.asarray(q, jnp.int32))
+        cw = unary.pack_hypervector(jnp.asarray(cl, jnp.int32))
+        want = np.where(q >= 0, 1, -1) @ np.where(cl >= 0, 1, -1).T
+        np.testing.assert_array_equal(
+            np.asarray(metrics.hamming_similarity_packed(qw, cw, d)), want
+        )
+        np.testing.assert_array_equal(np.asarray(ops.hamming_packed(qw, cw, d)), want)
+
+
+def test_kernel_in_model_path():
+    """HDCConfig(backend='pallas') routes encoding through the kernel."""
+    from repro.core import HDCConfig, HDCModel
+
+    cfg = HDCConfig(n_features=49, n_classes=4, d=256, backend="pallas")
+    model = HDCModel.create(cfg)
     x = jnp.asarray(RNG.uniform(0, 255, (6, 49)), jnp.float32)
-    got = encode(cfg, books, x)
-    cfg2 = HDCConfig(n_features=49, n_classes=4, d=256, encode_impl="naive")
-    want = encode(cfg2, books, x)
+    got = model.encode(x)
+    want = model.encode(x, backend="naive")
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,315 @@
+"""repro.serving: engine parity, micro-batching, hot reload, metrics."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HDCConfig, HDCModel, backend_names
+from repro.core import hdc_model as hm
+from repro.serving import (
+    MicroBatcher,
+    ModelRegistry,
+    ServingEngine,
+    ServingMetrics,
+    resolve_impl,
+)
+
+RNG = np.random.default_rng(21)
+
+
+def _cfg(**kw):
+    base = dict(n_features=24, n_classes=4, d=128, levels=16)
+    base.update(kw)
+    return HDCConfig(**base)
+
+
+def _trained(cfg, n=32):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return HDCModel.create(cfg).fit(x, y)
+
+
+def _queries(cfg, n=12):
+    return np.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# engine: the packed path is bit-identical to HDCModel.predict
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", backend_names("uhd"))
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_engine_bit_identical_to_predict_uhd(backend, impl):
+    """Acceptance: every registered uHD backend, both similarity impls."""
+    cfg = _cfg(similarity="hamming", backend=backend)
+    model = _trained(cfg)
+    engine = ServingEngine(model, batch_size=12, impl=impl)
+    x = _queries(cfg)
+    np.testing.assert_array_equal(engine.predict(x), np.asarray(model.predict(x)))
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_engine_bit_identical_to_predict_baseline(impl):
+    cfg = _cfg(encoder="baseline", similarity="hamming")
+    model = _trained(cfg)
+    engine = ServingEngine(model, batch_size=12, impl=impl)
+    x = _queries(cfg)
+    np.testing.assert_array_equal(engine.predict(x), np.asarray(model.predict(x)))
+
+
+def test_engine_impls_agree_and_resolve():
+    cfg = _cfg(similarity="hamming")
+    model = _trained(cfg)
+    x = _queries(cfg)
+    a = ServingEngine(model, impl="jnp").predict(x)
+    b = ServingEngine(model, impl="pallas").predict(x)
+    np.testing.assert_array_equal(a, b)
+    assert resolve_impl("auto", "tpu") == "pallas"
+    assert resolve_impl("auto", "cpu") == "jnp"
+    with pytest.raises(ValueError, match="unknown packed-similarity impl"):
+        resolve_impl("nope")
+
+
+def test_engine_from_checkpoint(tmp_path):
+    cfg = _cfg(similarity="hamming")
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=7)
+    engine = ServingEngine.from_checkpoint(tmp_path / "ckpt", batch_size=8)
+    assert engine.step == 7
+    x = _queries(cfg)
+    np.testing.assert_array_equal(engine.predict(x), np.asarray(model.predict(x)))
+    assert engine.describe()["n_classes"] == cfg.n_classes
+    with pytest.raises(FileNotFoundError):
+        ServingEngine.from_checkpoint(tmp_path / "empty")
+
+
+def test_pack_center_row_rescues_uhd_packed_accuracy():
+    """DESIGN.md §6: plain sign-packing of uHD collapses on sparse data;
+    per-row centering restores packed-hamming accuracy."""
+    from repro.data import make_synthetic
+
+    ds = make_synthetic("synth_mnist", n_train=768, n_test=192, seed=0)
+    kw = dict(n_features=ds.n_features, n_classes=ds.n_classes, d=1024,
+              similarity="hamming")
+    centered = HDCModel.create(HDCConfig(**kw)).fit(ds.train_images, ds.train_labels)
+    assert centered.cfg.resolved_pack_center == "row"
+    acc_c = centered.evaluate(ds.test_images, ds.test_labels)
+    plain = centered.replace(
+        cfg=dataclasses.replace(centered.cfg, pack_center="none")
+    )
+    acc_p = plain.evaluate(ds.test_images, ds.test_labels)
+    assert acc_c > 0.5, acc_c  # serves real predictions
+    assert acc_p < 0.3, acc_p  # the documented collapse
+    # baseline resolves to no centering (existing behaviour preserved)
+    assert HDCConfig(
+        n_features=8, n_classes=2, encoder="baseline"
+    ).resolved_pack_center == "none"
+
+
+def test_pack_validation():
+    with pytest.raises(ValueError, match="unknown pack_center"):
+        _cfg(pack_center="nope")
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def _engine(batch_size=8, **cfg_kw):
+    cfg = _cfg(similarity="hamming", **cfg_kw)
+    return ServingEngine(_trained(cfg), batch_size=batch_size)
+
+
+def test_batcher_flush_partial_batches():
+    """13 requests through 8 slots: two batches, three padded slots,
+    labels identical to a direct batch predict."""
+    engine = _engine(batch_size=8)
+    batcher = MicroBatcher(engine)
+    x = _queries(engine.model.cfg, n=13)
+    futures = batcher.submit_many(x)
+    assert batcher.queue_depth() == 13
+    served = batcher.flush()
+    assert served == 13
+    got = np.asarray([f.result(timeout=0) for f in futures])
+    np.testing.assert_array_equal(got, engine.predict(x))
+    m = batcher.metrics
+    assert m.n_batches == 2 and m.n_slots == 16 and m.n_padded == 3
+    assert m.queue_depth == 0
+    snap = m.snapshot()
+    assert snap["n_requests"] == 13
+    assert 0 < snap["batch_occupancy"] < 1
+    assert snap["p50_ms"] >= 0
+
+
+def test_batcher_threaded_stream():
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine, max_delay_ms=1.0).start()
+    batcher.start()  # idempotent
+    x = _queries(engine.model.cfg, n=11)
+    futures = [batcher.submit(img) for img in x]
+    got = np.asarray([f.result(timeout=30.0) for f in futures])
+    batcher.stop()
+    np.testing.assert_array_equal(got, engine.predict(x))
+
+
+def test_batcher_stop_drains_queue():
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine).start()
+    futures = batcher.submit_many(_queries(engine.model.cfg, n=9))
+    batcher.stop(drain=True)
+    assert all(f.done() for f in futures)
+
+
+def test_batcher_stop_without_drain_rejects():
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine)  # never started: queue sits
+    futures = batcher.submit_many(_queries(engine.model.cfg, n=3))
+    batcher.stop(drain=False)
+    for f in futures:
+        with pytest.raises(RuntimeError, match="server stopped"):
+            f.result(timeout=0)
+    assert batcher.metrics.snapshot()["queue_depth"] == 0  # no phantom backlog
+    # a stopped batcher rejects new requests instead of queueing forever
+    with pytest.raises(RuntimeError, match="batcher is stopped"):
+        batcher.submit(_queries(engine.model.cfg, n=1)[0])
+
+
+def test_batcher_stop_drains_even_without_thread():
+    """stop(drain=True) on a never-started batcher still serves the queue."""
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine)
+    futures = batcher.submit_many(_queries(engine.model.cfg, n=5))
+    batcher.stop(drain=True)
+    assert all(f.done() for f in futures)
+    assert all(isinstance(f.result(timeout=0), int) for f in futures)
+
+
+def test_batcher_submit_validates_shape():
+    batcher = MicroBatcher(_engine())
+    with pytest.raises(ValueError, match=r"one \(H,\) image"):
+        batcher.submit(np.zeros((2, 24), np.float32))
+
+
+def test_batcher_delivers_engine_errors():
+    engine = _engine(batch_size=4)
+
+    class Boom(Exception):
+        pass
+
+    def boom(images):
+        raise Boom("device fell over")
+
+    engine.predict = boom
+    batcher = MicroBatcher(engine)
+    futures = batcher.submit_many(_queries(engine.model.cfg, n=2))
+    batcher.flush()
+    for f in futures:
+        with pytest.raises(Boom):
+            f.result(timeout=0)
+    assert batcher.metrics.n_errors == 2
+
+
+# ---------------------------------------------------------------------------
+# registry + hot reload
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lifecycle(tmp_path):
+    cfg = _cfg(similarity="hamming")
+    _trained(cfg).save(tmp_path / "a", step=0)
+    reg = ModelRegistry()
+    batcher = reg.register_checkpoint("a", tmp_path / "a", batch_size=4)
+    assert reg.names() == ("a",)
+    assert reg.batcher("a") is batcher
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", reg.engine("a"))
+    with pytest.raises(KeyError, match="unknown model"):
+        reg.engine("nope")
+    fut = reg.submit("a", _queries(cfg, n=1)[0])
+    batcher.flush()
+    assert isinstance(fut.result(timeout=0), int)
+    assert "a" in reg.describe()
+    reg.stop_all()
+    assert reg.names() == ()
+
+
+def test_hot_reload_swaps_without_dropping_requests(tmp_path):
+    """The §6 contract: queued requests survive the swap and are served
+    by the NEW engine; the registry reports the step it promoted."""
+    cfg = _cfg(similarity="hamming")
+    x = jnp.asarray(RNG.uniform(0, 255, (64, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (64,)), jnp.int32)
+    m0 = HDCModel.create(cfg).fit(x[:32], y[:32])
+    m0.save(tmp_path / "ckpt", step=0)
+
+    reg = ModelRegistry()
+    batcher = reg.register_checkpoint("uhd", tmp_path / "ckpt", batch_size=4)
+    assert reg.hot_reload("uhd") is None  # nothing newer yet
+
+    q = _queries(cfg, n=6)
+    futures = batcher.submit_many(q)  # queued, drain not started
+
+    m1 = m0.partial_fit(x[32:], y[32:])
+    m1.save(tmp_path / "ckpt", step=1)
+    assert reg.hot_reload("uhd") == 1
+    assert reg.engine("uhd").step == 1
+    assert int(reg.engine("uhd").model.n_seen) == 64
+    assert batcher.queue_depth() == 6  # nothing dropped
+
+    batcher.flush()
+    got = np.asarray([f.result(timeout=0) for f in futures])
+    np.testing.assert_array_equal(got, reg.engine("uhd").predict(q))
+    assert batcher.metrics.n_reloads == 1
+
+    # explicit step pins an exact version (rollback)
+    assert reg.hot_reload("uhd", step=0) == 0
+    assert int(reg.engine("uhd").model.n_seen) == 32
+
+
+def test_hot_reload_requires_checkpoint_source():
+    reg = ModelRegistry()
+    reg.register("mem", _engine())
+    with pytest.raises(ValueError, match="hot reload needs a source"):
+        reg.hot_reload("mem")
+    reg.stop_all()
+
+
+def test_checkpoint_poll_latest(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    assert mgr.poll_latest() is None
+    _trained(_cfg()).save(tmp_path / "ckpt", step=3)
+    assert mgr.poll_latest() == 3
+    assert mgr.poll_latest(after=3) is None
+    _trained(_cfg()).save(tmp_path / "ckpt", step=5)
+    assert mgr.poll_latest(after=3) == 5
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_percentiles_and_counters():
+    m = ServingMetrics(window=100)
+    snap = m.snapshot()
+    assert np.isnan(snap["p99_ms"]) and snap["n_requests"] == 0
+    m.enqueued(10)
+    assert m.queue_depth == 10
+    m.observe_batch(8, 8)
+    m.observe_batch(2, 8)
+    for lat in np.linspace(0.001, 0.1, 100):
+        m.observe_request(float(lat))
+    m.observe_request(0.0, error=True)
+    snap = m.snapshot()
+    assert snap["n_requests"] == 101 and snap["n_errors"] == 1
+    assert snap["queue_depth"] == 0
+    assert snap["batch_occupancy"] == pytest.approx(10 / 16)
+    assert snap["p50_ms"] == pytest.approx(50.5, rel=0.1)
+    assert snap["p99_ms"] <= 100.0 + 1e-6
+    assert snap["throughput_rps"] > 0

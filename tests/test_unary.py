@@ -72,3 +72,32 @@ def test_majority_threshold_is_tob(h, count):
     count = min(count, h)
     got = bool(unary.majority_threshold(jnp.asarray(count), h))
     assert got == (2 * count >= h)  # TOB = H/2, ties -> set
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 6),  # query rows
+    c=st.integers(1, 11),  # class rows
+    d=st.integers(1, 100),  # D — includes every D % 32 residue
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_packed_similarity_matches_pm1_dot(b, c, d, seed):
+    """Serving-path property (batched): d - 2*popcount(pack(q) ^ pack(c))
+    equals the ±1 dot product of the unpacked hypervectors for random D
+    (including D not divisible by 32), on the Pallas kernel (interpret
+    off-TPU) and the pure-JAX packed path alike.  The same check runs
+    hypothesis-free in tests/test_kernels.py (this module skips where
+    hypothesis is absent)."""
+    from repro.core import metrics
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-7, 8, (b, d))
+    cl = rng.integers(-7, 8, (c, d))
+    qw = unary.pack_hypervector(jnp.asarray(q, jnp.int32))
+    cw = unary.pack_hypervector(jnp.asarray(cl, jnp.int32))
+    want = np.where(q >= 0, 1, -1) @ np.where(cl >= 0, 1, -1).T
+    np.testing.assert_array_equal(
+        np.asarray(metrics.hamming_similarity_packed(qw, cw, d)), want
+    )
+    np.testing.assert_array_equal(np.asarray(ops.hamming_packed(qw, cw, d)), want)
