@@ -1,0 +1,123 @@
+"""Table vs table-free uHD encoding: throughput and encoder-state bytes.
+
+The paper's headline *dynamic* claim, measured: the ``uhd`` encoder
+materializes the full (H, D) quantized threshold table, while
+``uhd_dynamic`` keeps only the (H, 32) quantized direction matrix and
+regenerates thresholds per D-tile at encode time.  For every config
+this script reports encode throughput (img/s, jitted steady state) and
+the codebook bytes of both encoders — at the paper-scale D = 8192 the
+dynamic codebook is 256x (levels=16) to 1024x (levels=256) smaller.
+
+Emits the ``BENCH_encode_dynamic`` artifact
+(artifacts/bench/BENCH_encode_dynamic.json), uploaded by CI next to
+``BENCH_serve.json`` so the size/throughput trajectory accumulates per
+commit.  The ``summary`` block pins the D = 8192 comparison that the
+acceptance gate reads (``bytes_ratio`` = table bytes / dynamic bytes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, save_artifact, table
+from repro.core import HDCConfig, HDCModel, resolve_backend
+
+H = 784  # MNIST-shaped feature count, like the paper
+
+
+def _codebook_bytes(model: HDCModel) -> int:
+    return int(sum(v.size * v.dtype.itemsize for v in model.codebooks.values()))
+
+
+def _throughput(model: HDCModel, x: jnp.ndarray) -> float:
+    fn = jax.jit(HDCModel.encode)  # model rides as a pytree, cfg static
+    t = bench(fn, model, x)
+    return len(x) / t
+
+
+def run(fast: bool = False) -> dict:
+    batch = 32 if fast else 128
+    # Always include the paper-scale D=8192 point (the acceptance gate);
+    # fast mode only skips the extra sweep values, not the headline.
+    ds = (1024, 8192) if fast else (1024, 4096, 8192)
+    levels_sweep = (16, 256)  # M = 4 (paper BRAM) and M = 8 quantization
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 255, (batch, H)), jnp.float32)
+
+    rows_out, rows_print = [], []
+    for d in ds:
+        for levels in levels_sweep:
+            cfg_t = HDCConfig(n_features=H, n_classes=10, d=d, levels=levels)
+            cfg_d = dataclasses.replace(cfg_t, encoder="uhd_dynamic")
+            m_t, m_d = HDCModel.create(cfg_t), HDCModel.create(cfg_d)
+            bytes_t, bytes_d = _codebook_bytes(m_t), _codebook_bytes(m_d)
+            ips_t, ips_d = _throughput(m_t, x), _throughput(m_d, x)
+            rec = {
+                "d": d,
+                "levels": levels,
+                "table_backend": resolve_backend("auto", encoder="uhd"),
+                "dynamic_backend": resolve_backend("auto", encoder="uhd_dynamic"),
+                "table_bytes": bytes_t,
+                "dynamic_bytes": bytes_d,
+                "bytes_ratio": bytes_t / bytes_d,
+                "table_img_per_s": ips_t,
+                "dynamic_img_per_s": ips_d,
+            }
+            rows_out.append(rec)
+            rows_print.append(
+                [d, levels, f"{bytes_t:,}", f"{bytes_d:,}",
+                 f"{bytes_t / bytes_d:.0f}x", f"{ips_t:.0f}", f"{ips_d:.0f}"]
+            )
+    table(
+        f"uHD encode: table vs dynamic (H={H}, B={batch}, "
+        f"{jax.default_backend()})",
+        ["D", "levels", "table bytes", "dyn bytes", "shrink",
+         "table img/s", "dyn img/s"],
+        rows_print,
+    )
+
+    headline = [r for r in rows_out if r["d"] == 8192]
+    payload = {
+        "device": jax.default_backend(),
+        "n_features": H,
+        "batch": batch,
+        "rows": rows_out,
+        "summary": {
+            "d": 8192,
+            # worst case over the levels sweep — the acceptance bound
+            # holds for every quantization setting, not a cherry-pick
+            "bytes_ratio_min": min(r["bytes_ratio"] for r in headline),
+            "per_levels": {
+                str(r["levels"]): {
+                    "codebook_bytes_table": r["table_bytes"],
+                    "codebook_bytes_dynamic": r["dynamic_bytes"],
+                    "bytes_ratio": r["bytes_ratio"],
+                    "table_img_per_s": r["table_img_per_s"],
+                    "dynamic_img_per_s": r["dynamic_img_per_s"],
+                }
+                for r in headline
+            },
+        },
+    }
+    save_artifact("BENCH_encode_dynamic", payload)
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sweep")
+    args = ap.parse_args()
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

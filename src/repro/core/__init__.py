@@ -10,19 +10,14 @@ Public API (see DESIGN.md):
   * :mod:`repro.core.registry` — encoder/backend registries:
     ``register_encoder``, ``register_backend``, ``resolve_backend``.
 
-The flat functions (``build_codebooks``, ``encode``, ``fit``, ...) are
-deprecated shims kept for older call sites.
+The flat functions (``build_codebooks``, ``encode``, ``fit``, ...) were
+removed after their deprecation period; accessing them raises an
+``AttributeError`` naming the ``HDCModel`` replacement.
 """
 
 from repro.core.model import (  # noqa: F401
     HDCConfig,
     baseline_iterative_search,
-    build_codebooks,
-    encode,
-    evaluate,
-    fit,
-    fit_streaming,
-    predict,
     train_and_eval,
 )
 from repro.core.hdc_model import HDCModel  # noqa: F401
@@ -38,3 +33,13 @@ from repro.core.registry import (  # noqa: F401
     resolve_backend,
 )
 from repro.core import encoders as _builtin_encoders  # noqa: F401  (registers)
+
+
+def __getattr__(name: str):
+    """Removed flat-API names get the same helpful tombstone as
+    :mod:`repro.core.model` (they were re-exported here)."""
+    from repro.core import model as _model
+
+    if name in _model._REMOVED_FLAT_API:
+        return getattr(_model, name)  # raises the helpful AttributeError
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,15 +1,22 @@
 """Built-in encoders and their registered backends.
 
-Two encoders ship with the repro, matching the paper:
+Three encoders ship with the repro, matching the paper:
 
-  * ``"uhd"`` — position-free Sobol/unary encoding (contribution 2),
-    with five equivalent datapaths: ``naive`` (broadcast compare),
-    ``blocked`` (D-tiled compare, bounded transient), ``unary_matmul``
-    (thermometer x one-hot binary GEMM on the MXU), ``pallas`` (fused
-    Pallas encode+bundle kernel; interpret mode off-TPU), and
+  * ``"uhd"`` — position-free Sobol/unary encoding (contribution 2)
+    over a materialized (H, D) threshold table, with five equivalent
+    datapaths: ``naive`` (broadcast compare), ``blocked`` (D-tiled
+    compare, bounded transient), ``unary_matmul`` (thermometer x
+    one-hot binary GEMM on the MXU), ``pallas`` (fused Pallas
+    encode+bundle kernel; interpret mode off-TPU), and
     ``unary_oracle`` (bit-exact simulation of the paper's UST +
     unary-comparator circuit — slow, the reference every other backend
     is tested against).
+  * ``"uhd_dynamic"`` — the paper's headline *dynamic* generation: the
+    same uHD encoding, but the codebook is only the (H, N_BITS)
+    quantized Sobol direction matrix and thresholds are regenerated
+    per D-tile at encode time (``ref`` pure-JAX datapath, ``pallas``
+    fused in-VMEM generation).  Bit-identical hypervectors to ``uhd``
+    from ~1000x less encoder state (DESIGN.md §7).
   * ``"baseline"`` — comparator-generated pseudo-random P x L
     bind+bundle (paper Fig. 1), with ``naive`` (gather + multiply
     reference) and ``unary_matmul`` (one-hot contraction) datapaths.
@@ -20,6 +27,7 @@ Registering a new encoder or datapath is purely additive — see
 
 from __future__ import annotations
 
+import warnings
 from typing import TYPE_CHECKING
 
 import jax
@@ -32,12 +40,40 @@ if TYPE_CHECKING:
     from repro.core.model import HDCConfig
 
 
+def _import_kernel_ops():
+    """Import hook for the Pallas probe (separate so tests can stub it)."""
+    from repro.kernels import ops
+
+    return ops
+
+
+_PALLAS_PROBE_WARNED = False
+
+
 def _pallas_available(platform: str) -> bool:
     """Pallas runs natively on TPU and in interpret mode elsewhere —
-    usable anywhere the kernel package imports."""
+    usable anywhere the kernel package imports.
+
+    Only a genuine ``ImportError`` (a missing optional dependency)
+    disables the backend — and we warn once, so an ``auto`` resolution
+    silently demoting to ``unary_matmul`` is at least visible.  Any
+    other exception is a bug in the kernel package and propagates: a
+    broken kernel must fail loudly, not quietly downgrade every TPU
+    run to the matmul datapath.
+    """
+    global _PALLAS_PROBE_WARNED
     try:
-        from repro.kernels import ops  # noqa: F401
-    except Exception:
+        _import_kernel_ops()
+    except ImportError as e:
+        if not _PALLAS_PROBE_WARNED:
+            _PALLAS_PROBE_WARNED = True
+            warnings.warn(
+                "Pallas backends disabled: repro.kernels.ops failed to "
+                f"import ({e}); resolve_backend('auto') will fall back to "
+                "the next datapath in the encoder's preference order",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         return False
     return True
 
@@ -58,6 +94,12 @@ class UHDEncoder(EncoderBase):
         "tpu": ("pallas", "unary_matmul", "blocked", "naive"),
         "default": ("unary_matmul", "blocked", "naive"),
     }
+    # uHD hypervectors carry a per-example brightness common mode: class
+    # sums must stay non-binarized and packing must row-center (the
+    # policy rationale lives in DESIGN.md §5-§6).
+    family = "uhd"
+    default_class_binarize = "none"
+    default_pack_center = "row"
 
     def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
         table = sobol.sobol_table_for_features(
@@ -112,6 +154,73 @@ def _uhd_unary_oracle(cfg, books, x_q):
     """Bit-exact UST + unary-comparator circuit simulation (slow)."""
     return encoding.uhd_encode_via_unary_comparator(
         x_q, books["sobol"].astype(jnp.int32), cfg.levels
+    )
+
+
+# ---------------------------------------------------------------------------
+# uHD dynamic: table-free Sobol generation (the paper's headline theme)
+# ---------------------------------------------------------------------------
+
+
+@register_encoder("uhd_dynamic")
+class UHDDynamicEncoder(UHDEncoder):
+    """Same uHD encoding, no (H, D) table: thresholds are regenerated
+    from the quantized Sobol direction matrix at encode time.
+
+    The codebook is ``{"direction": (H, N_BITS)}`` in the narrowest
+    unsigned dtype holding ``levels - 1`` (``cfg.seed`` selects the
+    direction-number draw, exactly like the table).  ``cfg.sobol_skip``
+    is honoured at encode time — both backends start their Gray-code
+    index at ``skip``, so hypervectors are bit-identical to every
+    ``uhd`` table backend.  Encoder state shrinks from O(H * D) to
+    O(H * N_BITS) bytes (~1000x at D = 8192), which is what makes very
+    large D cheap to train, checkpoint, and serve.
+
+    Inherits the uHD family policies (class sums stay non-binarized,
+    packing row-centers), so a ``uhd`` checkpoint converted via
+    ``HDCModel.convert("uhd_dynamic")`` predicts bit-identically.
+    """
+
+    reference_backend = "ref"
+    auto_order = {
+        # TPU-first: the fused kernel generates tiles in VMEM natively;
+        # elsewhere the pure-JAX tile scan leads (interpret mode is slow).
+        "tpu": ("pallas", "ref"),
+        "default": ("ref", "pallas"),
+    }
+
+    def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
+        dirs = sobol.quantized_direction_matrix(
+            cfg.n_features, cfg.levels, seed=cfg.seed
+        )
+        return {"direction": jnp.asarray(dirs)}
+
+    def codebook_specs(self, cfg: "HDCConfig") -> dict[str, jax.ShapeDtypeStruct]:
+        # explicit: direction numbers are generated host-side with numpy,
+        # which eval_shape would execute for real (same as the table)
+        return {
+            "direction": jax.ShapeDtypeStruct(
+                (cfg.n_features, sobol.N_BITS),
+                jnp.dtype(sobol.quantized_direction_dtype(cfg.levels)),
+            )
+        }
+
+
+@register_backend("uhd_dynamic", "ref")
+def _uhd_dynamic_ref(cfg, books, x_q):
+    """Pure-JAX per-D-tile Sobol regeneration (runs everywhere)."""
+    return encoding.uhd_encode_dynamic(
+        x_q, books["direction"], cfg.d, skip=cfg.sobol_skip
+    )
+
+
+@register_backend("uhd_dynamic", "pallas", available=_pallas_available)
+def _uhd_dynamic_pallas(cfg, books, x_q):
+    """Fused Pallas encode+bundle with in-VMEM Sobol generation."""
+    from repro.kernels import ops  # local import: kernels are optional
+
+    return ops.encode_bundle_dynamic(
+        x_q, books["direction"], cfg.d, skip=cfg.sobol_skip
     )
 
 

@@ -86,7 +86,22 @@ class HDCModel:
         class_sums: jax.Array | None = None,
         n_seen: jax.Array | int = 0,
     ) -> "HDCModel":
-        """Assemble from pre-built pieces (legacy call sites, dry-runs)."""
+        """Assemble from pre-built pieces (dry-runs, conversions).
+
+        The codebook layout is validated against the encoder named in
+        the config: pairing e.g. a ``uhd`` threshold table with a
+        ``uhd_dynamic`` config would not fail until predict time — and
+        then with garbage labels, not an error — so the mismatch is
+        rejected loudly here.
+        """
+        expected = set(registry.get_encoder(cfg.encoder).codebook_specs(cfg))
+        if set(codebooks) != expected:
+            raise ValueError(
+                f"codebook layout {sorted(codebooks)} does not match encoder "
+                f"{cfg.encoder!r} (expects {sorted(expected)}); state saved "
+                "under another encoder must be migrated with "
+                "HDCModel.convert, not re-labelled"
+            )
         if class_sums is None:
             class_sums = jnp.zeros((cfg.n_classes, cfg.d), jnp.int32)
         return cls(
@@ -157,6 +172,40 @@ class HDCModel:
         return self.replace(
             class_sums=jnp.zeros_like(self.class_sums),
             n_seen=jnp.zeros_like(self.n_seen),
+        )
+
+    def convert(self, encoder: str) -> "HDCModel":
+        """Re-encoder this model within its family, keeping class state.
+
+        Encoders that declare the same ``family`` produce bit-identical
+        hypervectors from the same config (e.g. ``uhd`` regenerates its
+        threshold table from the very Sobol stream ``uhd_dynamic``
+        re-derives per tile), so the accumulated ``class_sums`` remain
+        exactly valid under the new encoder — only the codebooks are
+        rebuilt (cheap, deterministic from the config).  The canonical
+        use: train/checkpoint with the table datapath, serve table-free
+        with the ~1000x smaller ``uhd_dynamic`` codebook.
+
+        Cross-family conversion is refused: different families encode
+        differently, so carried-over class sums would silently
+        mis-predict.
+        """
+        cur = self.encoder
+        new = registry.get_encoder(encoder)
+        if (cur.family or cur.name) != (new.family or new.name):
+            raise ValueError(
+                f"cannot convert encoder {cur.name!r} (family "
+                f"{cur.family or cur.name!r}) to {new.name!r} (family "
+                f"{new.family or new.name!r}): class sums only transfer "
+                "between encoders with bit-identical encode semantics"
+            )
+        # backend names are per-encoder; the old one may not exist here
+        cfg = dataclasses.replace(
+            self.cfg, encoder=encoder, backend="auto",
+            use_kernels=None, encode_impl=None,
+        )
+        return HDCModel.from_parts(
+            cfg, new.build_codebooks(cfg), self.class_sums, self.n_seen
         )
 
     def predict(self, images: jax.Array) -> jax.Array:

@@ -14,10 +14,11 @@ This module keeps two things:
     ``repro.core.registry.resolve_backend``; the former ``use_kernels``
     / ``encode_impl`` flags are accepted as deprecated aliases and
     rewritten into ``backend`` with a ``DeprecationWarning``.
-  * the original functional API (``build_codebooks`` / ``encode`` /
-    ``fit`` / ``fit_streaming`` / ``predict`` / ``evaluate``) as thin
-    deprecated wrappers forwarding to ``HDCModel`` — existing call
-    sites keep working while new code uses the model object.
+  * a tombstone for the original functional API (``build_codebooks`` /
+    ``encode`` / ``fit`` / ``fit_streaming`` / ``predict`` /
+    ``evaluate``): removed after its deprecation period, the module
+    ``__getattr__`` raises an ``AttributeError`` naming the
+    ``HDCModel`` replacement for each old entry point.
 
 Distribution: training/inference are pure SPMD functions of sharded
 image batches — under a mesh, images shard over ("pod","data") and the
@@ -31,17 +32,6 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from typing import Any
-
-import jax
-import jax.numpy as jnp
-
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.core.{old} is deprecated; use {new} (see DESIGN.md §2)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,88 +119,42 @@ class HDCConfig:
     def resolved_class_binarize(self) -> str:
         if self.class_binarize != "auto":
             return self.class_binarize
-        return "none" if self.encoder == "uhd" else "sign"
+        from repro.core import registry
+
+        return registry.get_encoder(self.encoder).default_class_binarize
 
     @property
     def resolved_pack_center(self) -> str:
         if self.pack_center != "auto":
             return self.pack_center
-        return "row" if self.encoder == "uhd" else "none"
+        from repro.core import registry
+
+        return registry.get_encoder(self.encoder).default_pack_center
 
 
 # ---------------------------------------------------------------------------
-# Legacy functional API — deprecated shims over HDCModel
+# Legacy functional API — REMOVED (was deprecated shims over HDCModel)
 # ---------------------------------------------------------------------------
 
-
-def build_codebooks(cfg: HDCConfig) -> dict[str, jax.Array]:
-    """DEPRECATED: use ``HDCModel.create(cfg).codebooks``."""
-    _deprecated("build_codebooks(cfg)", "HDCModel.create(cfg)")
-    from repro.core import registry
-
-    return registry.get_encoder(cfg.encoder).build_codebooks(cfg)
-
-
-def encode(cfg: HDCConfig, books: dict[str, jax.Array], images: jax.Array) -> jax.Array:
-    """DEPRECATED: use ``HDCModel.encode(images)``."""
-    _deprecated("encode(cfg, books, images)", "HDCModel.encode(images)")
-    from repro.core.hdc_model import HDCModel
-
-    return HDCModel.from_parts(cfg, books).encode(images)
+# name -> the HDCModel replacement, used for the helpful AttributeError.
+_REMOVED_FLAT_API = {
+    "build_codebooks": "HDCModel.create(cfg).codebooks",
+    "encode": "HDCModel.create(cfg).encode(images)",
+    "fit": "HDCModel.create(cfg).fit(images, labels)",
+    "fit_streaming": "HDCModel.create(cfg).fit_batches(batches)",
+    "predict": "HDCModel.predict(images)",
+    "evaluate": "HDCModel.evaluate(images, labels)",
+}
 
 
-def fit(
-    cfg: HDCConfig, books: dict[str, jax.Array], images: jax.Array, labels: jax.Array
-) -> jax.Array:
-    """DEPRECATED: use ``HDCModel.fit(images, labels)``.
-
-    Returns class hypervectors (C, D) int32 per the binarization policy.
-    """
-    _deprecated("fit(cfg, books, ...)", "HDCModel.fit(images, labels)")
-    from repro.core.hdc_model import HDCModel
-
-    return HDCModel.from_parts(cfg, books).fit(images, labels).class_hvs
-
-
-def fit_streaming(
-    cfg: HDCConfig,
-    books: dict[str, jax.Array],
-    batches: Any,
-) -> jax.Array:
-    """DEPRECATED: use ``HDCModel.fit_batches(batches)``."""
-    _deprecated("fit_streaming(cfg, books, ...)", "HDCModel.fit_batches(batches)")
-    from repro.core.hdc_model import HDCModel
-
-    return HDCModel.from_parts(cfg, books).fit_batches(batches).class_hvs
-
-
-def predict(
-    cfg: HDCConfig, books: dict[str, jax.Array], class_hvs: jax.Array, images: jax.Array
-) -> jax.Array:
-    """DEPRECATED: use ``HDCModel.predict(images)``."""
-    _deprecated("predict(cfg, books, class_hvs, ...)", "HDCModel.predict(images)")
-    from repro.core.hdc_model import HDCModel
-
-    # Re-binarization through the class_hvs property is idempotent, so
-    # passing an already-binarized array keeps the old semantics.
-    model = HDCModel.from_parts(cfg, books, class_sums=jnp.asarray(class_hvs))
-    return model.predict(images)
-
-
-def evaluate(
-    cfg: HDCConfig,
-    books: dict[str, jax.Array],
-    class_hvs: jax.Array,
-    images: jax.Array,
-    labels: jax.Array,
-    batch_size: int = 1024,
-) -> float:
-    """DEPRECATED: use ``HDCModel.evaluate(images, labels)``."""
-    _deprecated("evaluate(cfg, books, ...)", "HDCModel.evaluate(images, labels)")
-    from repro.core.hdc_model import HDCModel
-
-    model = HDCModel.from_parts(cfg, books, class_sums=jnp.asarray(class_hvs))
-    return model.evaluate(images, labels, batch_size=batch_size)
+def __getattr__(name: str) -> Any:
+    if name in _REMOVED_FLAT_API:
+        raise AttributeError(
+            f"repro.core.{name}(cfg, books, ...) was removed after a "
+            f"deprecation period; use {_REMOVED_FLAT_API[name]} instead "
+            "(see DESIGN.md §2 for the migration table)"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def train_and_eval(*args, **kw) -> float:

@@ -88,6 +88,18 @@ class EncoderBase:
     reference_backend: str = "naive"
     #: platform -> preference order; "default" is the fallback entry.
     auto_order: dict[str, tuple[str, ...]] = {"default": ("naive",)}
+    #: Encoders with bit-identical encode semantics (same hypervectors
+    #: from the same config, different codebook representation) declare
+    #: the same family name; ``HDCModel.convert`` moves accumulated
+    #: class state only within a family.  Empty means "own name only".
+    family: str = ""
+    #: Policy defaults consulted by ``HDCConfig.resolved_class_binarize``
+    #: / ``resolved_pack_center`` when the config says "auto" — the
+    #: encoder knows whether its hypervectors survive sign binarization
+    #: (see DESIGN.md §5-§6), so the policy lives here, not in an
+    #: if/elif on encoder names.
+    default_class_binarize: str = "sign"
+    default_pack_center: str = "none"
 
     def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
         raise NotImplementedError

@@ -154,6 +154,35 @@ def direction_matrix(n_dims: int, seed: int = 0) -> np.ndarray:
     return _direction_matrix_cached(n_dims, seed)
 
 
+def quantized_direction_matrix(n_dims: int, levels: int, *, seed: int = 0) -> np.ndarray:
+    """M-bit quantized direction integers, (n_dims, N_BITS) narrow unsigned.
+
+    Right-shift distributes over XOR — bit i of ``(a ^ b) >> s`` is bit
+    ``i+s`` of ``a`` XOR bit ``i+s`` of ``b`` — so Gray-code generation
+    from these pre-shifted direction numbers yields *exactly* the values
+    of :func:`quantized_sobol` for every point index.  Only
+    ``M = log2(levels)`` bits per entry survive, stored in the narrowest
+    dtype that holds ``levels - 1``: this is the whole encoder state of
+    the table-free datapath — O(n_dims * N_BITS) bytes instead of the
+    O(n_dims * D) threshold table (the paper's M-bit BRAM, kept as a
+    generator instead of materialized).
+    """
+    if levels & (levels - 1):
+        raise ValueError(f"levels must be a power of two, got {levels}")
+    m = int(levels).bit_length() - 1
+    v = direction_matrix(n_dims, seed) >> np.uint64(N_BITS - m)
+    return v.astype(quantized_direction_dtype(levels))
+
+
+def quantized_direction_dtype(levels: int) -> np.dtype:
+    """Narrowest unsigned dtype holding ``levels - 1`` (M quantization
+    bits) — the storage dtype of :func:`quantized_direction_matrix`,
+    shared with the encoder's ``codebook_specs`` so the checkpoint
+    template can never drift from what ``build_codebooks`` produces."""
+    m = int(levels).bit_length() - 1
+    return np.dtype(np.uint8 if m <= 8 else np.uint16 if m <= 16 else np.uint32)
+
+
 # ---------------------------------------------------------------------------
 # Sequence generation (vectorized Gray-code construction)
 # ---------------------------------------------------------------------------

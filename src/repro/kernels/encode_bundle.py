@@ -17,7 +17,8 @@ A `generate_sobol` variant regenerates the Sobol tile *inside* the
 kernel from the (H, 32) direction matrix (Gray-code XOR), eliminating
 the (H, D) threshold table from HBM entirely — the TPU mapping of the
 paper's "dynamic generation instead of stored tables" theme.  See
-ops.encode_bundle(..., dynamic_sobol=True).
+ops.encode_bundle_dynamic, registered as the "pallas" backend of the
+"uhd_dynamic" encoder.
 """
 
 from __future__ import annotations
@@ -76,11 +77,14 @@ def encode_bundle_pallas(
 
 
 def _encode_bundle_dyn_kernel(
-    x_ref, dir_ref, o_ref, *, ht: int, block_d: int, shift: int, n_bits: int
+    x_ref, dir_ref, o_ref, *, ht: int, block_d: int, shift: int, skip: int, n_bits: int
 ):
     """Sobol-free variant: thresholds are generated in VMEM from the
     direction matrix (dir_ref: (ht, n_bits) uint32) via Gray-code XOR.
-    `shift` right-shifts raw 32-bit Sobol integers to quantized levels.
+    `shift` right-shifts raw 32-bit Sobol integers to quantized levels
+    (0 when the direction numbers are pre-quantized).  `skip` offsets
+    the point index so the generated sequence matches a table built
+    with the same ``sobol_skip`` bit-for-bit.
     """
     k = pl.program_id(2)
     j = pl.program_id(1)
@@ -89,9 +93,10 @@ def _encode_bundle_dyn_kernel(
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    # Generate the (ht, dt) quantized Sobol tile for points [j*dt, (j+1)*dt).
-    # +1: skip the all-zeros Sobol point (matches sobol_sequence skip=1).
-    idx = (j * block_d + jax.lax.iota(jnp.uint32, block_d)) + jnp.uint32(1)
+    # Generate the (ht, dt) quantized Sobol tile for points
+    # [skip + j*dt, skip + (j+1)*dt) — `skip` drops the leading points,
+    # point 0 (all zeros) being degenerate, exactly like the table path.
+    idx = (j * block_d + jax.lax.iota(jnp.uint32, block_d)) + jnp.uint32(skip)
     gray = idx ^ (idx >> jnp.uint32(1))
     acc = jnp.zeros((dir_ref.shape[0], block_d), jnp.uint32)
     dirs = dir_ref[...]
@@ -107,9 +112,10 @@ def _encode_bundle_dyn_kernel(
 def encode_bundle_dynamic_pallas(
     x_q: jax.Array,
     direction: jax.Array,
-    levels: int,
     d: int,
     *,
+    shift: int = 0,
+    skip: int = 1,
     block_b: int = 8,
     block_h: int = 112,
     block_d: int = 512,
@@ -117,15 +123,16 @@ def encode_bundle_dynamic_pallas(
 ) -> jax.Array:
     """Fused encode+bundle with in-kernel Sobol generation.
 
-    x_q: (B, H) int32; direction: (H, n_bits) uint32 direction integers;
-    `d` = hypervector dimensionality (number of Sobol points generated).
+    x_q: (B, H) int32; direction: (H, n_bits) uint direction integers
+    (raw 32-bit with ``shift = 32 - M``, or M-bit pre-quantized with
+    ``shift = 0``); `d` = hypervector dimensionality (number of Sobol
+    points generated), `skip` = leading points dropped (``sobol_skip``).
     HBM traffic drops from O(H*D) (threshold table) to O(H*n_bits).
     """
     b, h = x_q.shape
     h2, n_bits = direction.shape
     assert h == h2
     assert b % block_b == 0 and h % block_h == 0 and d % block_d == 0
-    shift = 32 - (int(levels).bit_length() - 1)
 
     grid = (b // block_b, d // block_d, h // block_h)
     return pl.pallas_call(
@@ -134,6 +141,7 @@ def encode_bundle_dynamic_pallas(
             ht=block_h,
             block_d=block_d,
             shift=shift,
+            skip=skip,
             n_bits=n_bits,
         ),
         grid=grid,

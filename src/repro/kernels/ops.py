@@ -77,9 +77,10 @@ def encode_bundle(
 def encode_bundle_dynamic(
     x_q: jax.Array,
     direction: jax.Array,
-    levels: int,
     d: int,
     *,
+    levels: int | None = None,
+    skip: int = 1,
     block_b: int = 8,
     block_h: int = 112,
     block_d: int = 512,
@@ -87,23 +88,33 @@ def encode_bundle_dynamic(
 ) -> jax.Array:
     """Fused encode+bundle with in-kernel Sobol generation (no HBM table).
 
-    direction: (H, 32) uint32 direction integers from
-    `sobol.direction_matrix(H)`.  Matches encode_bundle(x_q,
-    quantized_sobol_table) bit-exactly (skip=1 convention).
+    direction: (H, 32) uint direction integers.  With `levels` given they
+    are the raw 32-bit integers from `sobol.direction_matrix(H)` and the
+    generated points are right-shifted to [0, levels) in-kernel; with
+    ``levels=None`` they are already M-bit quantized
+    (`sobol.quantized_direction_matrix`) and used as-is — exact either
+    way, since right-shift distributes over XOR.  `skip` must match the
+    table's ``sobol_skip``; then the result equals
+    ``encode_bundle(x_q, quantized_sobol_table)`` bit-for-bit.
     """
     if interpret is None:
         interpret = _interpret_default()
     b, h = x_q.shape
+    shift = 0 if levels is None else 32 - (int(levels).bit_length() - 1)
     bp, hp, dp = _round_up(b, block_b), _round_up(h, block_h), _round_up(d, block_d)
     xp = jnp.pad(x_q.astype(jnp.int32), ((0, bp - b), (0, hp - h)), constant_values=-1)
-    # Padded features get zero direction vectors -> threshold 0 -> compare
-    # x >= 0 is False for the pad value -1 -> contributes -1, corrected below.
+    # Padded features get zero direction vectors -> every generated
+    # threshold is exactly 0 for every `levels`/`shift` setting, and the
+    # pad intensity -1 never satisfies -1 >= 0 (real x_q can be 0, but
+    # real rows never meet padded thresholds) -> each padded feature
+    # contributes exactly -1 per dim, corrected below.
     dirp = jnp.pad(direction.astype(jnp.uint32), ((0, hp - h), (0, 0)))
     out = encode_bundle_dynamic_pallas(
         xp,
         dirp,
-        levels,
         dp,
+        shift=shift,
+        skip=skip,
         block_b=block_b,
         block_h=block_h,
         block_d=block_d,

@@ -62,8 +62,9 @@ def run_smoke(args) -> int:
     ds = load_dataset(args.dataset, n_train=args.n_train, n_test=args.requests)
     cfg = HDCConfig(
         n_features=ds.n_features, n_classes=ds.n_classes, d=args.d,
-        levels=args.levels, backend=args.backend,
+        levels=args.levels, encoder=args.encoder, backend=args.backend,
     )
+    name = args.encoder
     ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="hdc_serve_smoke_")
 
     # -- train + publish step 0 (first half of the training stream) ------
@@ -78,9 +79,9 @@ def run_smoke(args) -> int:
     registry = ModelRegistry()
     # pin step 0 explicitly: a reused --ckpt dir may hold newer stale steps
     batcher = registry.register_checkpoint(
-        "uhd", ckpt_dir, step=0, batch_size=args.batch, impl=args.impl, start=True
+        name, ckpt_dir, step=0, batch_size=args.batch, impl=args.impl, start=True
     )
-    engine = registry.engine("uhd")
+    engine = registry.engine(name)
     print(f"engine loaded: {engine.describe()}")
 
     # parity: the packed path must agree with HDCModel.predict (hamming)
@@ -95,24 +96,24 @@ def run_smoke(args) -> int:
 
     # -- serve first half of the stream ----------------------------------
     n1 = len(ds.test_images) // 2
-    preds1, wall1 = _serve_stream(registry, "uhd", ds.test_images[:n1])
+    preds1, wall1 = _serve_stream(registry, name, ds.test_images[:n1])
 
     # -- trainer publishes step 1; service hot-reloads mid-stream --------
     model = engine.model.partial_fit(ds.train_images[half:], ds.train_labels[half:])
     model.save(ckpt_dir, step=1)
-    swapped = registry.hot_reload("uhd", step=1)  # pinned: dir may be reused
+    swapped = registry.hot_reload(name, step=1)  # pinned: dir may be reused
     assert swapped == 1, f"expected hot reload to step 1, got {swapped}"
     print(f"hot-reloaded to step {swapped} "
-          f"(n_seen {int(registry.engine('uhd').model.n_seen)}) "
+          f"(n_seen {int(registry.engine(name).model.n_seen)}) "
           f"with {batcher.queue_depth()} requests queued")
 
     # -- serve the rest of the stream on the new engine ------------------
-    preds2, wall2 = _serve_stream(registry, "uhd", ds.test_images[n1:])
+    preds2, wall2 = _serve_stream(registry, name, ds.test_images[n1:])
     preds = np.concatenate([preds1, preds2])
     acc = float((preds == ds.test_labels).mean())
 
     registry.stop_all()
-    _print_stats("uhd", batcher.metrics.snapshot(), len(preds), wall1 + wall2)
+    _print_stats(name, batcher.metrics.snapshot(), len(preds), wall1 + wall2)
     print(f"served accuracy over {len(preds)} requests: {acc:.4f}")
     print("smoke OK")
     return 0
@@ -149,6 +150,8 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--batch", type=int, default=32,
                     help="static serving batch (slot count)")
+    ap.add_argument("--encoder", default="uhd",
+                    help="registered encoder (uhd | uhd_dynamic | baseline)")
     ap.add_argument("--backend", default="auto",
                     help="encode datapath (registry name or auto)")
     ap.add_argument("--impl", default="auto",

@@ -20,7 +20,7 @@ import time
 
 import numpy as np
 
-from repro.core import HDCConfig, HDCModel, backend_names, baseline_iterative_search
+from repro.core import HDCConfig, HDCModel, baseline_iterative_search
 from repro.data import load_dataset
 from repro.distributed.sharding import set_current_mesh
 from repro.launch.mesh import mesh_for
@@ -33,9 +33,12 @@ def main(argv=None) -> int:
     ap.add_argument("--levels", type=int, default=16)
     ap.add_argument("--n-train", type=int, default=4096)
     ap.add_argument("--n-test", type=int, default=1024)
+    ap.add_argument("--encoder", default="uhd",
+                    help="registered encoder (uhd | uhd_dynamic | baseline)")
     ap.add_argument(
         "--backend", default="auto",
-        help=f"datapath: auto | {' | '.join(backend_names('uhd'))}",
+        help="encode datapath: auto, or a backend registered for the "
+             "chosen encoder (a bad name errors listing the options)",
     )
     ap.add_argument("--batch-size", type=int, default=2048)
     ap.add_argument("--save-dir", default=None,
@@ -53,7 +56,7 @@ def main(argv=None) -> int:
 
     cfg = HDCConfig(
         n_features=ds.n_features, n_classes=ds.n_classes, d=args.d,
-        levels=args.levels, backend=args.backend,
+        levels=args.levels, encoder=args.encoder, backend=args.backend,
     )
 
     def batches():
@@ -64,7 +67,7 @@ def main(argv=None) -> int:
     t0 = time.time()
     model = HDCModel.create(cfg).fit_batches(batches())
     acc = model.evaluate(ds.test_images, ds.test_labels)
-    print(f"uHD  D={args.d} backend={args.backend}: accuracy {acc:.4f}  "
+    print(f"{args.encoder}  D={args.d} backend={args.backend}: accuracy {acc:.4f}  "
           f"({int(model.n_seen)} images, single pass, {time.time()-t0:.1f}s)")
 
     if args.save_dir:

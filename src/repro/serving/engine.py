@@ -128,4 +128,9 @@ class ServingEngine:
             "source": str(self.source) if self.source else None,
             "n_seen": int(self.model.n_seen),
             "packed_bytes": int(self.class_words.size * 4),
+            # resident encoder state: the whole point of uhd_dynamic is
+            # that this is O(H*32) instead of the O(H*D) table
+            "codebook_bytes": int(
+                sum(v.size * v.dtype.itemsize for v in self.model.codebooks.values())
+            ),
         }

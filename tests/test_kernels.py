@@ -38,14 +38,34 @@ def test_encode_unary_mxu_kernel(b, h, d):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@pytest.mark.parametrize("b,h,d", [(4, 50, 512), (8, 112, 1024)])
-def test_encode_bundle_dynamic_kernel(b, h, d):
-    """In-kernel Sobol generation == table-based encode, bit-exact."""
-    x, s = _case(b, h, d)
+@pytest.mark.parametrize(
+    "b,h,d,levels,skip",
+    [
+        (4, 50, 512, 16, 1),     # H padded to the 112 tile
+        (8, 112, 1024, 16, 1),   # exact grid
+        (8, 112, 1024, 16, 7),   # nonzero sobol_skip must match the table
+        (3, 113, 640, 2, 1),     # H % tile == 1, D % tile != 0, 1-bit levels
+        (5, 100, 576, 256, 3),   # 8-bit quantization + skip
+    ],
+)
+def test_encode_bundle_dynamic_kernel(b, h, d, levels, skip):
+    """In-kernel Sobol generation == table-based encode, bit-exact,
+    including nonzero skip and padded H (the all-zero padded direction
+    rows must contribute exactly -1 per dim for every `levels`)."""
+    x = jnp.asarray(RNG.integers(0, levels + 1, (b, h)), jnp.int32)
+    # pin the x_q == 0 edge: a whole real row at the minimum intensity
+    # still compares correctly against padded threshold-0 rows
+    x = x.at[0].set(0)
+    s = jnp.asarray(sobol.sobol_table_for_features(h, d, levels, skip=skip), jnp.int32)
     want = ref.encode_bundle(x, s)
     dirs = jnp.asarray(sobol.direction_matrix(h).astype(np.uint32))
-    got = ops.encode_bundle_dynamic(x, dirs, 16, d)
+    got = ops.encode_bundle_dynamic(x, dirs, d, levels=levels, skip=skip)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # pre-quantized direction numbers (the uhd_dynamic codebook): exact
+    # because right-shift distributes over XOR
+    qdirs = jnp.asarray(sobol.quantized_direction_matrix(h, levels))
+    got_q = ops.encode_bundle_dynamic(x, qdirs, d, skip=skip)
+    np.testing.assert_array_equal(np.asarray(got_q), np.asarray(want))
 
 
 def test_sobol_tile_ref_matches_generator():

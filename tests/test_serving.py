@@ -51,6 +51,34 @@ def test_engine_bit_identical_to_predict_uhd(backend, impl):
     np.testing.assert_array_equal(engine.predict(x), np.asarray(model.predict(x)))
 
 
+@pytest.mark.parametrize("backend", backend_names("uhd_dynamic"))
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_engine_bit_identical_to_predict_uhd_dynamic(backend, impl):
+    """The table-free encoder serves bit-identically through the packed
+    path too, for both registered datapaths and both similarity impls."""
+    cfg = _cfg(encoder="uhd_dynamic", similarity="hamming", backend=backend)
+    model = _trained(cfg)
+    engine = ServingEngine(model, batch_size=12, impl=impl)
+    x = _queries(cfg)
+    np.testing.assert_array_equal(engine.predict(x), np.asarray(model.predict(x)))
+
+
+def test_dynamic_engine_serves_same_labels_as_table_engine():
+    """A converted (table -> dynamic) model serves the exact labels of
+    the table engine it came from — the serving-side acceptance check."""
+    cfg = _cfg(similarity="hamming")
+    table_model = _trained(cfg)
+    dyn_model = table_model.convert("uhd_dynamic")
+    x = _queries(cfg, n=16)
+    table_engine = ServingEngine(table_model, batch_size=8)
+    dyn_engine = ServingEngine(dyn_model, batch_size=8)
+    np.testing.assert_array_equal(table_engine.predict(x), dyn_engine.predict(x))
+    # and the dynamic engine's resident codebook is the small one
+    desc_t, desc_d = table_engine.describe(), dyn_engine.describe()
+    assert desc_d["codebook_bytes"] * 4 <= desc_t["codebook_bytes"]
+    assert desc_d["encoder"] == "uhd_dynamic"
+
+
 @pytest.mark.parametrize("impl", ["jnp", "pallas"])
 def test_engine_bit_identical_to_predict_baseline(impl):
     cfg = _cfg(encoder="baseline", similarity="hamming")
@@ -268,6 +296,39 @@ def test_hot_reload_swaps_without_dropping_requests(tmp_path):
     # explicit step pins an exact version (rollback)
     assert reg.hot_reload("uhd", step=0) == 0
     assert int(reg.engine("uhd").model.n_seen) == 32
+
+
+def test_hot_reload_table_checkpoint_to_dynamic_checkpoint(tmp_path):
+    """Serving smoke for the migration story: boot from a table-encoder
+    checkpoint, hot-reload onto a dynamic-encoder checkpoint published
+    by the trainer, and keep serving identical labels throughout."""
+    cfg = _cfg(similarity="hamming")
+    table_model = _trained(cfg)
+    table_model.save(tmp_path / "ckpt", step=0)
+
+    reg = ModelRegistry()
+    batcher = reg.register_checkpoint("m", tmp_path / "ckpt", batch_size=4)
+    assert reg.engine("m").model.cfg.encoder == "uhd"
+    q = _queries(cfg, n=6)
+    queued = batcher.submit_many(q)  # in the FIFO across the swap
+
+    # trainer publishes the table-free representation of the same model
+    table_model.convert("uhd_dynamic").save(tmp_path / "ckpt", step=1)
+    assert reg.hot_reload("m") == 1
+    engine = reg.engine("m")
+    assert engine.model.cfg.encoder == "uhd_dynamic"
+    assert batcher.queue_depth() == 6  # nothing dropped by the swap
+
+    batcher.flush()
+    before = np.asarray([f.result(timeout=0) for f in queued])
+    after_futures = batcher.submit_many(q)
+    batcher.flush()
+    after = np.asarray([f.result(timeout=0) for f in after_futures])
+    # bit-identical serving across the table -> dynamic swap
+    np.testing.assert_array_equal(before, np.asarray(table_model.predict(q)))
+    np.testing.assert_array_equal(after, before)
+    assert batcher.metrics.n_reloads == 1
+    reg.stop_all()
 
 
 def test_hot_reload_requires_checkpoint_source():

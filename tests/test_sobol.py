@@ -67,3 +67,28 @@ def test_direction_matrix_shapes():
     assert v.dtype == np.uint64
     # left-justified: top bit of v_1 is set for every dimension
     assert ((v[:, 0] >> np.uint64(sobol.N_BITS - 1)) & np.uint64(1)).all()
+
+
+@pytest.mark.parametrize("levels,dtype", [(2, np.uint8), (16, np.uint8),
+                                          (256, np.uint8), (1 << 12, np.uint16)])
+def test_quantized_direction_matrix_generates_quantized_sobol(levels, dtype):
+    """Gray-code generation from M-bit pre-shifted direction numbers
+    reproduces quantized_sobol exactly (shift distributes over XOR) —
+    the identity the whole uhd_dynamic codebook rests on."""
+    n_dims, n_points, skip = 8, 64, 3
+    qd = sobol.quantized_direction_matrix(n_dims, levels)
+    assert qd.shape == (n_dims, sobol.N_BITS)
+    assert qd.dtype == dtype
+    assert int(qd.max()) < levels
+    idx = np.arange(skip, skip + n_points, dtype=np.uint64)
+    gray = idx ^ (idx >> np.uint64(1))
+    out = np.zeros((n_points, n_dims), np.uint32)
+    for bit in range(sobol.N_BITS):
+        mask = ((gray >> np.uint64(bit)) & np.uint64(1)).astype(np.uint32)
+        out ^= mask[:, None] * qd[None, :, bit].astype(np.uint32)
+    want = sobol.quantized_sobol(n_dims, n_points, levels, skip=skip)
+    np.testing.assert_array_equal(out.astype(np.int32), want)
+    # seed sensitivity flows through, like the table
+    assert not np.array_equal(
+        qd, sobol.quantized_direction_matrix(n_dims, levels, seed=1)
+    )
