@@ -1,11 +1,18 @@
 """Serving throughput: packed-hamming engine vs unpacked predict.
 
-Measures (a) the jitted engine datapath at several static batch sizes
-(img/s, and speedup over `HDCModel.predict` with the cosine similarity
-it replaces at serve time), and (b) the end-to-end micro-batcher with a
-one-image-at-a-time request stream (img/s, p50/p99 latency).  Emits the
-`BENCH_serve` artifact (artifacts/bench/BENCH_serve.json) consumed by
-CI so the serving-perf trajectory accumulates per commit.
+Measures, for each requested encoder (by default both the table `uhd`
+datapath and the table-free `uhd_dynamic` one, side by side):
+
+  (a) the jitted engine datapath at several static batch sizes (img/s,
+      and speedup over `HDCModel.predict` with the cosine similarity it
+      replaces at serve time), and
+  (b) the end-to-end micro-batcher with a one-image-at-a-time request
+      stream (img/s, p50/p99 latency).
+
+Emits the `BENCH_serve` artifact (artifacts/bench/BENCH_serve.json)
+consumed by CI so the serving-perf trajectory accumulates per commit —
+`payload["encoders"]` holds one entry per serving datapath, including
+each engine's resident ``codebook_bytes`` (the uHD memory headline).
 """
 
 from __future__ import annotations
@@ -23,16 +30,19 @@ from repro.core import HDCConfig, HDCModel
 from repro.data import load_dataset
 from repro.serving import ModelRegistry, ServingEngine
 
+DEFAULT_ENCODERS = ("uhd", "uhd_dynamic")
 
-def run(fast: bool = False, d: int | None = None) -> dict:
-    d = d or (1024 if fast else 4096)
+
+def run_encoder(encoder: str, *, fast: bool, d: int) -> dict:
     n_train = 512 if fast else 2048
     stream_n = 128 if fast else 512
     batches = (1, 8, 32) if fast else (1, 8, 32, 128)
 
     ds = load_dataset("synth_mnist", n_train=n_train, n_test=max(batches))
-    cfg = HDCConfig(n_features=ds.n_features, n_classes=ds.n_classes, d=d)
-    ckpt = tempfile.mkdtemp(prefix="hdc_serve_bench_")
+    cfg = HDCConfig(
+        n_features=ds.n_features, n_classes=ds.n_classes, d=d, encoder=encoder
+    )
+    ckpt = tempfile.mkdtemp(prefix=f"hdc_serve_bench_{encoder}_")
     model = HDCModel.create(cfg).fit(ds.train_images, ds.train_labels)
     model.save(ckpt, step=0)
 
@@ -51,17 +61,16 @@ def run(fast: bool = False, d: int | None = None) -> dict:
              "ref_img_per_s": b / t_ref, "speedup_vs_predict": t_ref / t_pack}
         )
     table(
-        f"serving datapath (D={d}, {jax.default_backend()}, impl="
-        f"{engine.impl})",
+        f"serving datapath (encoder={encoder}, D={d}, "
+        f"{jax.default_backend()}, impl={engine.impl})",
         ["batch", "packed img/s", "ms/batch", "predict img/s", "speedup"],
         rows,
     )
 
     # end-to-end: request stream through the continuous micro-batcher
     registry = ModelRegistry()
-    batcher = registry.register_checkpoint(
-        "uhd", ckpt, batch_size=32, start=True
-    )
+    batcher = registry.register_checkpoint(encoder, ckpt, batch_size=32, start=True)
+    codebook_bytes = registry.engine(encoder).describe()["codebook_bytes"]
     stream = np.asarray(
         np.tile(ds.test_images, (stream_n // len(ds.test_images) + 1, 1))[:stream_n],
         np.float32,
@@ -71,19 +80,18 @@ def run(fast: bool = False, d: int | None = None) -> dict:
     for f in futures:
         f.result(timeout=120.0)
     wall = time.perf_counter() - t0
-    registry.stop_all()
+    registry.shutdown()
     snap = batcher.metrics.snapshot()
     table(
-        "micro-batcher end-to-end (batch=32)",
+        f"micro-batcher end-to-end (encoder={encoder}, batch=32)",
         ["requests", "img/s", "p50 ms", "p99 ms", "occupancy"],
         [[stream_n, f"{stream_n / wall:.0f}", f"{snap['p50_ms']:.2f}",
           f"{snap['p99_ms']:.2f}", f"{snap['batch_occupancy']:.2f}"]],
     )
 
-    payload = {
-        "device": jax.default_backend(),
-        "d": d,
+    return {
         "impl": engine.impl,
+        "codebook_bytes": int(codebook_bytes),
         "engine": engine_stats,
         "batcher": {
             "requests": stream_n,
@@ -92,6 +100,27 @@ def run(fast: bool = False, d: int | None = None) -> dict:
                ("p50_ms", "p99_ms", "mean_ms", "batch_occupancy", "n_batches")},
         },
     }
+
+
+def run(
+    fast: bool = False,
+    d: int | None = None,
+    encoders: tuple[str, ...] = DEFAULT_ENCODERS,
+) -> dict:
+    d = d or (1024 if fast else 4096)
+    payload = {
+        "device": jax.default_backend(),
+        "d": d,
+        "encoders": {enc: run_encoder(enc, fast=fast, d=d) for enc in encoders},
+    }
+    if len(encoders) > 1:
+        first, *rest = encoders
+        base = payload["encoders"][first]["codebook_bytes"]
+        for enc in rest:
+            other = payload["encoders"][enc]["codebook_bytes"]
+            payload.setdefault("codebook_bytes_ratio", {})[
+                f"{first}/{enc}"
+            ] = base / max(1, other)
     save_artifact("BENCH_serve", payload)
     return payload
 
@@ -100,8 +129,12 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller sizes")
     ap.add_argument("--d", type=int, default=None)
+    ap.add_argument("--encoder", action="append", default=None,
+                    help="encoder(s) to bench (repeatable); default: "
+                         + " + ".join(DEFAULT_ENCODERS))
     args = ap.parse_args()
-    run(fast=args.fast, d=args.d)
+    run(fast=args.fast, d=args.d,
+        encoders=tuple(args.encoder) if args.encoder else DEFAULT_ENCODERS)
     return 0
 
 

@@ -1,0 +1,194 @@
+"""End-to-end HTTP transport benchmark: latency, throughput, shedding.
+
+Two phases against a live `HdcHttpServer` on a real socket:
+
+  1. **closed-loop calibration** — a few client workers issue requests
+     back-to-back to measure the sustainable service rate;
+  2. **open-loop offered load** — request send times are fixed on a
+     clock at ``saturation_factor`` times the calibrated rate,
+     *regardless of completions* (the arrival process of a
+     million-user front-end does not slow down because the server is
+     busy).  With the admission bound set, the overload shows up as a
+     429 shed rate instead of an unbounded queue — exactly the
+     degrade-loudly contract DESIGN.md §8 pins.
+
+Emits the `BENCH_transport` artifact (artifacts/bench/
+BENCH_transport.json): p50/p99 end-to-end latency over the socket,
+achieved img/s, and the shed rate at the saturating offered load.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import save_artifact, table
+from repro.core import HDCConfig, HDCModel
+from repro.data import load_dataset
+from repro.serving import ModelRegistry
+from repro.transport import HdcClient, HdcHttpServer, OverloadedError
+
+
+def _closed_loop_rate(host, port, name, images, *, workers=16, n=128) -> float:
+    """Requests/s with `workers` clients issuing back-to-back singles."""
+    counter = itertools.count()
+    t0 = time.perf_counter()
+
+    def worker():
+        with HdcClient(host, port, timeout_s=60.0) as client:
+            while next(counter) < n:
+                client.predict_batch(name, images[:1])
+
+    threads = [threading.Thread(target=worker) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return n / (time.perf_counter() - t0)
+
+
+def _open_loop(
+    host, port, name, images, *, offered_rps: float, n: int, workers: int = 32
+):
+    """Fire `n` single-image requests at fixed wall-clock send times.
+
+    Returns (latencies_s of successes, n_ok, n_shed, n_error, wall_s).
+    Send deadlines are absolute — a slow response delays nothing but the
+    worker that owns it, so offered load holds while the server sheds.
+    """
+    idx = itertools.count()
+    lock = threading.Lock()
+    latencies: list[float] = []
+    n_ok = n_shed = n_error = 0
+    t0 = time.perf_counter() + 0.05  # common epoch for all workers
+
+    def worker():
+        nonlocal n_ok, n_shed, n_error
+        with HdcClient(host, port, timeout_s=60.0) as client:
+            while True:
+                i = next(idx)
+                if i >= n:
+                    return
+                deadline = t0 + i / offered_rps
+                now = time.perf_counter()
+                if deadline > now:
+                    time.sleep(deadline - now)
+                img = images[i % len(images)][None]
+                t_send = time.perf_counter()
+                try:
+                    client.predict_batch(name, img)
+                except OverloadedError:
+                    with lock:
+                        n_shed += 1
+                    continue
+                except Exception:
+                    with lock:
+                        n_error += 1
+                    continue
+                lat = time.perf_counter() - t_send
+                with lock:
+                    latencies.append(lat)
+                    n_ok += 1
+
+    threads = [threading.Thread(target=worker) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return latencies, n_ok, n_shed, n_error, wall
+
+
+def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
+    d = d or (1024 if fast else 4096)
+    n_train = 512 if fast else 2048
+    n_calib = 96 if fast else 256
+    n_open = 384 if fast else 2048
+    saturation = 2.5
+
+    ds = load_dataset("synth_mnist", n_train=n_train, n_test=256)
+    cfg = HDCConfig(
+        n_features=ds.n_features, n_classes=ds.n_classes, d=d, encoder=encoder
+    )
+    ckpt = tempfile.mkdtemp(prefix="hdc_transport_bench_")
+    HDCModel.create(cfg).fit(ds.train_images, ds.train_labels).save(ckpt, step=0)
+
+    registry = ModelRegistry()
+    max_depth = 8
+    # calibration runs unbounded (a shed would kill the closed-loop rate
+    # measurement); the admission bound is applied just before the
+    # open-loop phase, deliberately below the client concurrency so
+    # saturation sheds (429) instead of queueing the overload away
+    registry.register_checkpoint(encoder, ckpt, batch_size=32, start=True)
+    server = HdcHttpServer(registry, max_queue_depth=None).start()
+    host, port = server.address
+    images = np.asarray(ds.test_images, np.float32)
+
+    try:
+        base_rps = _closed_loop_rate(host, port, encoder, images, n=n_calib)
+        offered = saturation * base_rps
+        registry.batcher(encoder).max_depth = max_depth
+        lat, n_ok, n_shed, n_error, wall = _open_loop(
+            host, port, encoder, images, offered_rps=offered, n=n_open
+        )
+    finally:
+        server.stop()
+        registry.shutdown()
+
+    lat_ms = np.asarray(lat, np.float64) * 1e3
+    p50 = float(np.percentile(lat_ms, 50)) if lat_ms.size else float("nan")
+    p99 = float(np.percentile(lat_ms, 99)) if lat_ms.size else float("nan")
+    achieved = n_ok / wall
+    shed_rate = n_shed / max(1, n_ok + n_shed + n_error)
+    table(
+        f"HTTP transport, open loop at {saturation:g}x the closed-loop rate "
+        f"(D={d}, {encoder}, {jax.default_backend()})",
+        ["offered rps", "achieved rps", "shed rate", "p50 ms", "p99 ms",
+         "ok/shed/err"],
+        [[f"{offered:.0f}", f"{achieved:.0f}", f"{shed_rate:.2f}",
+          f"{p50:.2f}", f"{p99:.2f}", f"{n_ok}/{n_shed}/{n_error}"]],
+    )
+
+    payload = {
+        "device": jax.default_backend(),
+        "d": d,
+        "encoder": encoder,
+        "closed_loop_rps": base_rps,
+        "offered_rps": offered,
+        "achieved_rps": achieved,
+        "img_per_s": achieved,
+        "shed_rate": shed_rate,
+        "p50_ms": p50,
+        "p99_ms": p99,
+        "n_requests": n_open,
+        "n_ok": n_ok,
+        "n_shed": n_shed,
+        "n_errors": n_error,
+        "max_queue_depth": max_depth,
+        "saturation_factor": saturation,
+    }
+    save_artifact("BENCH_transport", payload)
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    ap.add_argument("--d", type=int, default=None)
+    ap.add_argument("--encoder", default="uhd",
+                    help="served encoder (uhd | uhd_dynamic)")
+    args = ap.parse_args()
+    run(fast=args.fast, d=args.d, encoder=args.encoder)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,10 +11,12 @@ without dropping queued requests.
     batcher  = registry.register("uhd", engine.warmup(), start=True)
     label    = batcher.submit(image).result(timeout=1.0)
 
-CLI driver: ``python -m repro.launch.serve_hdc --smoke``.
+CLI drivers: ``python -m repro.launch.serve_hdc --smoke`` (in-process),
+``python -m repro.launch.serve_http --smoke`` (over the network front-end
+in `repro.transport`, DESIGN.md §8).
 """
 
-from repro.serving.batcher import MicroBatcher, ServingFuture  # noqa: F401
+from repro.serving.batcher import MicroBatcher, QueueFull, ServingFuture  # noqa: F401
 from repro.serving.engine import ServingEngine, resolve_impl  # noqa: F401
 from repro.serving.metrics import ServingMetrics  # noqa: F401
 from repro.serving.registry import ModelRegistry  # noqa: F401

@@ -36,15 +36,27 @@ from repro.serving.engine import ServingEngine
 from repro.serving.metrics import ServingMetrics
 
 
+class QueueFull(RuntimeError):
+    """Admission control: the batcher's bounded queue is at `max_depth`.
+
+    Raised by :meth:`MicroBatcher.submit` instead of queueing — overload
+    degrades loudly (the HTTP transport maps this to 429) rather than
+    growing an unbounded backlog until the process OOMs.
+    """
+
+
 class ServingFuture:
     """Handle for one queued request; resolves to an int label."""
 
-    __slots__ = ("_event", "_label", "_error", "t_submit", "t_done")
+    __slots__ = ("_event", "_label", "_error", "_callbacks", "_cb_lock",
+                 "t_submit", "t_done")
 
     def __init__(self):
         self._event = threading.Event()
         self._label: int | None = None
         self._error: BaseException | None = None
+        self._callbacks: list = []
+        self._cb_lock = threading.Lock()
         self.t_submit = time.perf_counter()
         self.t_done: float | None = None
 
@@ -58,6 +70,17 @@ class ServingFuture:
             raise self._error
         return self._label  # type: ignore[return-value]
 
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` when the future resolves (immediately if it
+        already has).  The asyncio transport uses this to bridge drain
+        threads to event-loop futures without burning an executor thread
+        per in-flight request."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
     def latency_s(self) -> float:
         assert self.t_done is not None, "request not finished"
         return self.t_done - self.t_submit
@@ -65,7 +88,17 @@ class ServingFuture:
     def _resolve(self, label: int | None, error: BaseException | None = None):
         self.t_done = time.perf_counter()
         self._label, self._error = label, error
-        self._event.set()
+        with self._cb_lock:
+            # set under the lock so add_done_callback never misses: it is
+            # either appended before this (and invoked below) or sees the
+            # event set and runs inline
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:  # a callback must never kill the drain loop
+                pass
 
 
 class MicroBatcher:
@@ -76,10 +109,12 @@ class MicroBatcher:
         engine: ServingEngine,
         *,
         max_delay_ms: float = 2.0,
+        max_depth: int | None = None,
         metrics: ServingMetrics | None = None,
     ):
         self.engine = engine
         self.max_delay_s = max_delay_ms / 1e3
+        self.max_depth = max_depth  # None = unbounded (library use)
         self.metrics = metrics or ServingMetrics()
         self._queue: collections.deque[tuple[np.ndarray, ServingFuture]] = (
             collections.deque()
@@ -99,7 +134,14 @@ class MicroBatcher:
         fut = ServingFuture()
         with self._cv:
             if self._closed:
+                self.metrics.rejected()
                 raise RuntimeError("batcher is stopped; request rejected")
+            if self.max_depth is not None and len(self._queue) >= self.max_depth:
+                self.metrics.shed()
+                raise QueueFull(
+                    f"queue depth {len(self._queue)} at max_depth "
+                    f"{self.max_depth}; request shed"
+                )
             self._queue.append((image, fut))
             self.metrics.enqueued()
             self._cv.notify_all()
@@ -107,6 +149,35 @@ class MicroBatcher:
 
     def submit_many(self, images) -> list[ServingFuture]:
         return [self.submit(img) for img in np.asarray(images, np.float32)]
+
+    def submit_block(self, images) -> list[ServingFuture]:
+        """All-or-nothing batch admission under one lock: either every
+        image is queued or none is (`QueueFull`/`RuntimeError`).  The
+        HTTP transport uses this so a mid-batch race with the depth
+        bound or a concurrent `stop()` can't strand an already-submitted
+        prefix whose results nobody will read."""
+        images = np.asarray(images, np.float32)
+        if images.ndim != 2:
+            raise ValueError(f"submit_block takes (n, H) images, got {images.shape}")
+        with self._cv:
+            if self._closed:
+                self.metrics.rejected(len(images))
+                raise RuntimeError("batcher is stopped; request rejected")
+            if (
+                self.max_depth is not None
+                and len(self._queue) + len(images) > self.max_depth
+            ):
+                self.metrics.shed(len(images))
+                raise QueueFull(
+                    f"queue depth {len(self._queue)} + {len(images)} exceeds "
+                    f"max_depth {self.max_depth}; batch shed"
+                )
+            futures = [ServingFuture() for _ in images]
+            for img, fut in zip(images, futures):
+                self._queue.append((img, fut))
+            self.metrics.enqueued(len(images))
+            self._cv.notify_all()
+        return futures
 
     def swap_engine(self, engine: ServingEngine) -> None:
         """Atomically replace the engine (hot reload).  Queued requests
@@ -200,17 +271,24 @@ class MicroBatcher:
                 return self
             self._running = True
             self._closed = False
-        self._thread = threading.Thread(
-            target=self._drain_loop, name="hdc-serve-drain", daemon=True
-        )
-        self._thread.start()
+            self._thread = threading.Thread(
+                target=self._drain_loop, name="hdc-serve-drain", daemon=True
+            )
+            self._thread.start()
         return self
 
     def stop(self, *, drain: bool = True) -> None:
-        """Stop the drain thread; with `drain`, serve what is queued first."""
+        """Stop the drain thread; with `drain`, serve what is queued first.
+
+        Idempotent and safe to race: submits are rejected the instant
+        `_closed` is set (never silently dropped), and the thread handle
+        is claimed under the lock so two concurrent `stop()` calls can't
+        both join-and-clear it.
+        """
         with self._cv:
             self._running = False
             self._closed = True
+            thread, self._thread = self._thread, None
             if not drain:
                 pending = list(self._queue)
                 self._queue.clear()
@@ -218,9 +296,8 @@ class MicroBatcher:
                 for _, fut in pending:
                     fut._resolve(None, RuntimeError("server stopped"))
             self._cv.notify_all()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        if thread is not None:
+            thread.join()
         if drain:
             # a never-started (or already-joined) batcher still honours
             # the drain promise: serve whatever is left synchronously

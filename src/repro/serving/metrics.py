@@ -32,6 +32,8 @@ class ServingMetrics:
         self.n_padded = 0  # slots that carried padding, not a request
         self.n_errors = 0  # requests failed with an exception
         self.n_reloads = 0  # hot engine swaps observed
+        self.n_shed = 0  # admission-rejected under overload (HTTP 429)
+        self.n_rejected = 0  # rejected for non-load reasons (stopped batcher)
         self.queue_depth = 0  # requests currently waiting (gauge)
 
     # -- mutators (called from batcher/registry threads) -----------------
@@ -68,6 +70,16 @@ class ServingMetrics:
         with self._lock:
             self.n_reloads += 1
 
+    def shed(self, n: int = 1) -> None:
+        """Requests turned away by admission control (never queued)."""
+        with self._lock:
+            self.n_shed += int(n)
+
+    def rejected(self, n: int = 1) -> None:
+        """Requests refused for non-load reasons (e.g. stopped batcher)."""
+        with self._lock:
+            self.n_rejected += int(n)
+
     # -- reads ------------------------------------------------------------
 
     def latency_percentiles_ms(
@@ -85,6 +97,10 @@ class ServingMetrics:
         `throughput_rps` spans first-to-last request completion (idle
         and setup time before/after traffic don't dilute it);
         `elapsed_s` is total time since construction.
+
+        Every value is a plain Python int or float (never a numpy
+        scalar) so ``json.dumps(snapshot())`` round-trips — the
+        `/metrics` HTTP endpoint dumps it verbatim.
         """
         with self._lock:
             elapsed = time.perf_counter() - self._t0
@@ -95,17 +111,19 @@ class ServingMetrics:
             )
             lat = np.asarray(self._latency_s, np.float64)
             out = {
-                "n_requests": self.n_requests,
-                "n_batches": self.n_batches,
-                "n_errors": self.n_errors,
-                "n_reloads": self.n_reloads,
-                "queue_depth": self.queue_depth,
+                "n_requests": int(self.n_requests),
+                "n_batches": int(self.n_batches),
+                "n_errors": int(self.n_errors),
+                "n_reloads": int(self.n_reloads),
+                "n_shed": int(self.n_shed),
+                "n_rejected": int(self.n_rejected),
+                "queue_depth": int(self.queue_depth),
                 "batch_occupancy": (
                     (self.n_slots - self.n_padded) / self.n_slots
                     if self.n_slots
                     else float("nan")
                 ),
-                "elapsed_s": elapsed,
+                "elapsed_s": float(elapsed),
                 "throughput_rps": (
                     self.n_requests / window if window > 0 else float("nan")
                 ),

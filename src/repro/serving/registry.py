@@ -39,6 +39,7 @@ class ModelRegistry:
     def __init__(self):
         self._lock = threading.RLock()
         self._entries: dict[str, MicroBatcher] = {}
+        self._watchers: dict[str, object] = {}  # name -> ReloadWatcher-like
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -48,13 +49,16 @@ class ModelRegistry:
         engine: ServingEngine,
         *,
         max_delay_ms: float = 2.0,
+        max_depth: int | None = None,
         start: bool = False,
     ) -> MicroBatcher:
         """Put a model behind a name; returns its micro-batcher."""
         with self._lock:
             if name in self._entries:
                 raise ValueError(f"model {name!r} already registered")
-            batcher = MicroBatcher(engine, max_delay_ms=max_delay_ms)
+            batcher = MicroBatcher(
+                engine, max_delay_ms=max_delay_ms, max_depth=max_depth
+            )
             self._entries[name] = batcher
         if start:
             batcher.start()
@@ -69,22 +73,69 @@ class ModelRegistry:
         batch_size: int = 64,
         impl: str = "auto",
         max_delay_ms: float = 2.0,
+        max_depth: int | None = None,
         start: bool = False,
     ) -> MicroBatcher:
         """Load-and-register in one call (the common server boot path)."""
         engine = ServingEngine.from_checkpoint(
             path, step=step, batch_size=batch_size, impl=impl
         ).warmup()
-        return self.register(name, engine, max_delay_ms=max_delay_ms, start=start)
+        return self.register(
+            name, engine, max_delay_ms=max_delay_ms, max_depth=max_depth,
+            start=start,
+        )
+
+    def attach_watcher(self, name: str, watcher) -> None:
+        """Tie a lifecycle watcher (anything with ``stop()``) to an entry
+        so `shutdown`/`unregister` stop it before draining the batcher.
+        One watcher per entry; `ReloadWatcher.start` calls this."""
+        with self._lock:
+            if name not in self._entries:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {sorted(self._entries)}"
+                )
+            if name in self._watchers:
+                raise ValueError(f"model {name!r} already has a watcher")
+            self._watchers[name] = watcher
+
+    def watcher(self, name: str):
+        with self._lock:
+            return self._watchers.get(name)
 
     def unregister(self, name: str, *, drain: bool = True) -> None:
+        """Tear one entry down in deterministic order: its watcher first
+        (no promotion can race the drain), then the batcher (serving the
+        queued remainder when `drain`), then the engine reference is
+        dropped with the entry."""
         with self._lock:
             batcher = self._entries.pop(name)
+            watcher = self._watchers.pop(name, None)
+        if watcher is not None:
+            watcher.stop()
         batcher.stop(drain=drain)
 
+    def shutdown(self, *, drain: bool = True) -> None:
+        """Stop everything, idempotently, in name order: all watchers,
+        then each batcher (drained), engines released with the entries.
+        Safe to call twice or concurrently with `unregister`."""
+        with self._lock:
+            watchers = sorted(self._watchers.items())
+            self._watchers = {}
+        for _, watcher in watchers:
+            watcher.stop()
+        while True:
+            names = self.names()
+            if not names:
+                return
+            for name in names:
+                try:
+                    self.unregister(name, drain=drain)
+                except KeyError:  # lost a race with a concurrent teardown
+                    pass
+
     def stop_all(self, *, drain: bool = True) -> None:
-        for name in self.names():
-            self.unregister(name, drain=drain)
+        """Back-compat alias for :meth:`shutdown`."""
+        self.shutdown(drain=drain)
 
     # -- lookup ------------------------------------------------------------
 

@@ -1,0 +1,26 @@
+"""repro.transport — network front-end + lifecycle watcher (DESIGN.md §8).
+
+Turns the `repro.serving` library into a service: `HdcHttpServer`
+exposes a `ModelRegistry` over HTTP/1.1 (JSON control plane, raw
+little-endian binary hot path, bounded-queue admission control),
+`HdcClient` is its stdlib client, and `ReloadWatcher` closes the
+checkpoint-promotion loop by polling `CheckpointManager.poll_latest`
+in the background — including auto-promoting `convert`-ed
+table -> `uhd_dynamic` checkpoints so a fleet migrates to the small
+codebook without restarts.
+
+    registry = ModelRegistry()
+    registry.register_checkpoint("uhd", "ckpt/", start=True)
+    ReloadWatcher(registry, "uhd", interval_s=2.0).start()
+    server = HdcHttpServer(registry, port=8000).start()
+    ...
+    server.stop()          # stop accepting, drain in-flight connections
+    registry.shutdown()    # watchers -> batcher drain -> engine release
+
+CLI driver: ``python -m repro.launch.serve_http --smoke``.
+"""
+
+from repro.transport import protocol  # noqa: F401
+from repro.transport.client import HdcClient, OverloadedError, TransportError  # noqa: F401
+from repro.transport.server import HdcHttpServer  # noqa: F401
+from repro.transport.watcher import ReloadWatcher  # noqa: F401

@@ -1,0 +1,155 @@
+"""`HdcClient`: stdlib HTTP client for the HDC serving front-end.
+
+A thin, dependency-free wrapper over `http.client` that speaks the
+protocol module's two planes: JSON for control (health, models,
+metrics, debuggable predict) and raw little-endian f32/i32 bytes for
+the hot path (`predict_batch(..., binary=True)`).  Used by the tests,
+`benchmarks/transport_bench.py`'s load generator, `examples/`, and the
+`serve_http --smoke` driver.
+
+One client wraps one keep-alive connection and is **not** thread-safe —
+the load generator gives each worker thread its own client, exactly as
+a real fleet gives each connection its own socket.  A server restart
+between requests surfaces as a stale keep-alive socket; `_request`
+reconnects and retries once, which is safe because every route here is
+idempotent (predictions are pure).
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+
+import numpy as np
+
+from repro.transport import protocol
+
+
+class TransportError(RuntimeError):
+    """Non-2xx response from the serving front-end."""
+
+    def __init__(self, status: int, message: str, payload: dict | None = None):
+        super().__init__(f"HTTP {status}: {message}")
+        self.status = int(status)
+        self.payload = payload or {}
+
+
+class OverloadedError(TransportError):
+    """429: admission control shed the request; safe to retry later."""
+
+
+class HdcClient:
+    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0):
+        self.host, self.port = host, int(port)
+        self.timeout_s = float(timeout_s)
+        self._conn: http.client.HTTPConnection | None = None
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _connect(self) -> http.client.HTTPConnection:
+        if self._conn is None:
+            self._conn = http.client.HTTPConnection(
+                self.host, self.port, timeout=self.timeout_s
+            )
+        return self._conn
+
+    def close(self) -> None:
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
+
+    def __enter__(self) -> "HdcClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _request(
+        self,
+        method: str,
+        path: str,
+        body: bytes | None = None,
+        headers: dict[str, str] | None = None,
+    ) -> tuple[int, str, bytes]:
+        """One round-trip; retries once on a stale keep-alive socket."""
+        for attempt in (0, 1):
+            conn = self._connect()
+            try:
+                conn.request(method, path, body=body, headers=headers or {})
+                resp = conn.getresponse()
+                payload = resp.read()
+                return resp.status, resp.headers.get_content_type(), payload
+            except (http.client.HTTPException, ConnectionError, BrokenPipeError):
+                self.close()
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    @staticmethod
+    def _raise_for_status(status: int, content_type: str, payload: bytes):
+        """Returns the parsed JSON body (or None); raises on >= 400."""
+        obj = None
+        if content_type == protocol.CT_JSON and payload:
+            obj = json.loads(payload)
+        if status >= 400:
+            message = (obj or {}).get("error", payload.decode("utf-8", "replace"))
+            err = OverloadedError if status == 429 else TransportError
+            raise err(status, message, obj)
+        return obj
+
+    def _json(self, method: str, path: str, body: bytes | None = None,
+              headers: dict[str, str] | None = None):
+        status, content_type, payload = self._request(method, path, body, headers)
+        obj = self._raise_for_status(status, content_type, payload)
+        return obj if obj is not None else payload
+
+    # -- control plane -----------------------------------------------------
+
+    def healthz(self) -> dict:
+        return self._json("GET", protocol.ROUTE_HEALTH)
+
+    def models(self) -> dict:
+        return self._json("GET", protocol.ROUTE_MODELS)["models"]
+
+    def metrics(self) -> dict:
+        return self._json("GET", protocol.ROUTE_METRICS)
+
+    # -- predict -----------------------------------------------------------
+
+    def predict(self, name: str, image) -> int:
+        """Single image over the JSON control form -> int label."""
+        body = json.dumps(
+            {"image": np.asarray(image, np.float32).ravel().tolist()}
+        ).encode()
+        out = self._json(
+            "POST", protocol.predict_path(name), body,
+            {"Content-Type": protocol.CT_JSON},
+        )
+        return int(out["label"])
+
+    def predict_batch(self, name: str, images, *, binary: bool = True) -> np.ndarray:
+        """(n, H) images -> (n,) int32 labels.
+
+        `binary=True` is the hot path: raw f32 out, raw i32 back.
+        `binary=False` exercises the JSON batch form.
+        """
+        images = np.asarray(images, np.float32)
+        if binary:
+            status, content_type, payload = self._request(
+                "POST",
+                protocol.predict_path(name),
+                protocol.encode_images(images),
+                {"Content-Type": protocol.CT_F32, "Accept": protocol.CT_I32},
+            )
+            self._raise_for_status(status, content_type, payload)
+            if content_type != protocol.CT_I32:
+                raise TransportError(
+                    status, f"expected {protocol.CT_I32} body, got {content_type}"
+                )
+            return protocol.decode_labels(payload)
+        body = json.dumps({"images": images.tolist()}).encode()
+        out = self._json(
+            "POST", protocol.predict_path(name), body,
+            {"Content-Type": protocol.CT_JSON},
+        )
+        return np.asarray(out["labels"], np.int32)

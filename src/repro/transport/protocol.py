@@ -1,0 +1,99 @@
+"""Wire protocol for the HDC serving front-end (DESIGN.md §8).
+
+Two planes, both over plain HTTP/1.1:
+
+  * **control plane** — JSON.  Health, model listing, metrics, and the
+    debuggable predict form (``{"image": [...]}`` / ``{"images":
+    [[...], ...]}``) all speak ``application/json``.
+  * **hot path** — raw little-endian binary.  A predict body of
+    ``application/x-hdc-f32`` is the C-order bytes of an ``(n, H)``
+    float32 image block (no framing: ``n`` is inferred from the body
+    length, ``H`` from the target model's config), and a client that
+    sends ``Accept: application/x-hdc-i32`` gets the ``(n,)`` int32
+    labels back as raw bytes.  This keeps the per-request cost of a
+    million-user front-end at one memcpy each way — no base64, no JSON
+    float parsing on a 784-float image.
+
+Everything here is shared by `server` and `client` so the two ends can
+never skew; the codec functions are pure and unit-tested in
+``tests/test_transport.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# content types
+CT_JSON = "application/json"
+CT_F32 = "application/x-hdc-f32"  # raw LE float32 image rows, C order
+CT_I32 = "application/x-hdc-i32"  # raw LE int32 labels
+
+# canonical routes
+ROUTE_HEALTH = "/healthz"
+ROUTE_MODELS = "/v1/models"
+ROUTE_METRICS = "/metrics"
+PREDICT_SUFFIX = ":predict"
+
+_F32 = np.dtype("<f4")
+_I32 = np.dtype("<i4")
+
+
+def predict_path(name: str) -> str:
+    return f"{ROUTE_MODELS}/{name}{PREDICT_SUFFIX}"
+
+
+def encode_images(images) -> bytes:
+    """(n, H) or (H,) float-like -> raw little-endian float32 bytes."""
+    arr = np.ascontiguousarray(np.asarray(images, _F32))
+    if arr.ndim == 1:
+        arr = arr[None]
+    if arr.ndim != 2:
+        raise ValueError(f"images must be (n, H) or (H,), got {arr.shape}")
+    return arr.tobytes()
+
+
+def decode_images(body: bytes, n_features: int) -> np.ndarray:
+    """Raw f32 bytes -> (n, H) float32; loud on any length mismatch."""
+    row_bytes = n_features * _F32.itemsize
+    if len(body) == 0 or len(body) % row_bytes != 0:
+        raise ValueError(
+            f"binary image payload of {len(body)} bytes is not a positive "
+            f"multiple of {row_bytes} (= {n_features} float32 features)"
+        )
+    return np.frombuffer(body, _F32).reshape(-1, n_features).astype(
+        np.float32, copy=False
+    )
+
+
+def encode_labels(labels) -> bytes:
+    return np.ascontiguousarray(np.asarray(labels, _I32).ravel()).tobytes()
+
+
+def decode_labels(body: bytes) -> np.ndarray:
+    if len(body) % _I32.itemsize != 0:
+        raise ValueError(f"label payload of {len(body)} bytes is not int32-aligned")
+    return np.frombuffer(body, _I32).astype(np.int32, copy=False)
+
+
+def parse_predict_json(obj) -> tuple[np.ndarray, bool]:
+    """JSON predict body -> ((n, H) float32, was_single).
+
+    ``{"image": [...]}`` is the single-request form (response carries
+    ``"label"``); ``{"images": [[...], ...]}`` is the batch form
+    (response carries ``"labels"``).  Anything else is a 400.
+    """
+    if not isinstance(obj, dict) or ("image" in obj) == ("images" in obj):
+        raise ValueError(
+            'predict body must be {"image": [...]} or {"images": [[...], ...]}'
+        )
+    single = "image" in obj
+    arr = np.asarray(obj["image"] if single else obj["images"], np.float32)
+    if single:
+        if arr.ndim != 1:
+            raise ValueError(f'"image" must be a flat (H,) list, got {arr.shape}')
+        arr = arr[None]
+    elif arr.ndim != 2 or arr.shape[0] == 0:
+        raise ValueError(
+            f'"images" must be a non-empty (n, H) list of lists, got {arr.shape}'
+        )
+    return arr, single

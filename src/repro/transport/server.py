@@ -1,0 +1,426 @@
+"""`HdcHttpServer`: the network front-end over `repro.serving`.
+
+Stdlib-only (asyncio + `http.HTTPStatus`): one event loop on a
+dedicated daemon thread accepts HTTP/1.1 keep-alive connections and
+bridges them to the *threaded* serving stack.  The bridge is
+callback-based, not executor-based — `ServingFuture.add_done_callback`
+posts the drain thread's resolution back onto the loop with
+`call_soon_threadsafe`, so 10k in-flight requests cost 10k small
+futures, not 10k blocked threads.
+
+Routes (DESIGN.md §8):
+
+  * ``POST /v1/models/{name}:predict`` — single or batch.  JSON control
+    form or the raw little-endian ``application/x-hdc-f32`` hot path;
+    ``Accept: application/x-hdc-i32`` selects raw int32 labels back.
+  * ``GET /healthz`` — liveness + per-model step/queue-depth/watcher.
+  * ``GET /v1/models`` — `ServingEngine.describe()` per model
+    (including ``codebook_bytes``, the uHD deployment headline).
+  * ``GET /metrics`` — `ServingMetrics.snapshot()` per model, dumped
+    verbatim (snapshots are plain ints/floats by contract).
+
+Admission control — overload degrades loudly instead of OOMing:
+
+  * bounded queue depth (the batcher's own ``max_depth`` if set, else
+    the server-wide ``max_queue_depth``) -> **429** + the model's
+    ``n_shed`` counter;
+  * oversize payload (``Content-Length > max_body_bytes``) -> **413**
+    without buffering the body;
+  * submits racing a stopping batcher -> **503** + ``n_rejected`` (the
+    registry rejects-after-stop instead of silently dropping futures).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+from dataclasses import dataclass, field
+from http import HTTPStatus
+from urllib.parse import unquote, urlsplit
+
+from repro.serving.batcher import QueueFull
+from repro.serving.registry import ModelRegistry
+from repro.transport import protocol
+
+_DISCARD_CHUNK = 1 << 20
+
+
+@dataclass
+class _Request:
+    method: str
+    path: str
+    headers: dict[str, str]
+    body: bytes
+    keep_alive: bool
+    oversize: int = 0  # nonzero: declared Content-Length that was refused
+
+    def header(self, name: str, default: str = "") -> str:
+        return self.headers.get(name.lower(), default)
+
+
+@dataclass
+class _Response:
+    status: HTTPStatus
+    body: bytes
+    content_type: str
+    extra_headers: dict[str, str] = field(default_factory=dict)
+
+    @classmethod
+    def json(cls, status: HTTPStatus, obj) -> "_Response":
+        return cls(status, json.dumps(obj).encode(), protocol.CT_JSON)
+
+    @classmethod
+    def error(cls, status: HTTPStatus, message: str, **extra) -> "_Response":
+        return cls.json(status, {"error": message, **extra})
+
+
+class HdcHttpServer:
+    """Asyncio HTTP/1.1 front-end for a `ModelRegistry`."""
+
+    def __init__(
+        self,
+        registry: ModelRegistry,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        max_queue_depth: int | None = 1024,
+        max_body_bytes: int = 32 << 20,
+        request_timeout_s: float = 60.0,
+    ):
+        self.registry = registry
+        self.host = host
+        self.port = port  # 0 -> ephemeral; rewritten to the bound port
+        self.max_queue_depth = max_queue_depth
+        self.max_body_bytes = int(max_body_bytes)
+        self.request_timeout_s = float(request_timeout_s)
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._thread: threading.Thread | None = None
+        self._server: asyncio.AbstractServer | None = None
+        self._closing = False
+        # task -> busy flag: True while a fully-read request is being
+        # served, False while idle between keep-alive requests (only the
+        # loop thread touches this)
+        self._conns: dict[asyncio.Task, list[bool]] = {}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "HdcHttpServer":
+        """Bind and serve on a background event-loop thread; returns
+        once the socket is listening (`self.port` holds the bound port)."""
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self._loop.run_forever, name="hdc-http-loop", daemon=True
+        )
+        self._thread.start()
+        fut = asyncio.run_coroutine_threadsafe(self._bind(), self._loop)
+        fut.result(timeout=30.0)
+        return self
+
+    async def _bind(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle_connection, self.host, self.port
+        )
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    def stop(self, *, drain: bool = True, timeout_s: float = 30.0) -> None:
+        """Stop accepting, then (with `drain`) wait for in-flight
+        connections to finish before tearing the loop down.  Idempotent.
+        Does not touch the registry — `ModelRegistry.shutdown()` is the
+        caller's next line (watchers -> batcher drain -> engines)."""
+        loop, self._loop = self._loop, None
+        thread, self._thread = self._thread, None
+        if loop is None:
+            return
+        fut = asyncio.run_coroutine_threadsafe(
+            self._shutdown(drain=drain, timeout_s=timeout_s), loop
+        )
+        fut.result(timeout=timeout_s + 10.0)
+        loop.call_soon_threadsafe(loop.stop)
+        if thread is not None:
+            thread.join()
+        loop.close()
+
+    async def _shutdown(self, *, drain: bool, timeout_s: float) -> None:
+        self._closing = True
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        # idle keep-alive connections (parked in readline waiting for a
+        # next request) are cancelled immediately; busy ones — a request
+        # is being served — get the drain window
+        for task, busy in list(self._conns.items()):
+            if not task.done() and not (drain and busy[0]):
+                task.cancel()
+        tasks = [t for t in self._conns if not t.done()]
+        if tasks:
+            done, pending = await asyncio.wait(tasks, timeout=timeout_s)
+            for t in pending:  # stragglers past the drain window
+                t.cancel()
+            await asyncio.gather(*pending, return_exceptions=True)
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    # -- connection handling ----------------------------------------------
+
+    async def _handle_connection(self, reader, writer) -> None:
+        task = asyncio.current_task()
+        busy = [False]
+        if task is not None:
+            self._conns[task] = busy
+            task.add_done_callback(lambda t: self._conns.pop(t, None))
+        try:
+            while not self._closing:
+                request = await self._read_request(reader)
+                if request is None:
+                    break
+                busy[0] = True
+                if request.oversize:
+                    response = _Response.error(
+                        HTTPStatus.REQUEST_ENTITY_TOO_LARGE,
+                        f"payload of {request.oversize} bytes exceeds "
+                        f"max_body_bytes={self.max_body_bytes}",
+                    )
+                else:
+                    response = await self._dispatch(request)
+                keep_alive = request.keep_alive and not self._closing
+                await self._write_response(writer, response, keep_alive)
+                busy[0] = False
+                if not keep_alive:
+                    break
+        except (
+            asyncio.IncompleteReadError,
+            asyncio.LimitOverrunError,
+            ConnectionError,
+            asyncio.CancelledError,
+        ):
+            pass  # client went away / shutdown cancelled us mid-read
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, asyncio.CancelledError):
+                pass
+
+    async def _read_request(self, reader) -> _Request | None:
+        line = await reader.readline()
+        if not line:
+            return None  # clean EOF between keep-alive requests
+        try:
+            method, target, version = line.decode("latin-1").split()
+        except ValueError:
+            raise ConnectionError("malformed request line") from None
+        headers: dict[str, str] = {}
+        while True:
+            raw = await reader.readline()
+            if raw in (b"\r\n", b"\n", b""):
+                break
+            key, _, value = raw.decode("latin-1").partition(":")
+            headers[key.strip().lower()] = value.strip()
+        keep_alive = headers.get("connection", "").lower() != "close" and (
+            version.upper() != "HTTP/1.0"
+        )
+        length = int(headers.get("content-length", "0") or "0")
+        path = unquote(urlsplit(target).path)
+        if length > self.max_body_bytes:
+            # refuse without buffering: drain the wire in small chunks so
+            # the connection stays usable, but never hold the payload
+            remaining = length
+            while remaining > 0:
+                chunk = await reader.read(min(_DISCARD_CHUNK, remaining))
+                if not chunk:
+                    break
+                remaining -= len(chunk)
+            return _Request(method, path, headers, b"", keep_alive, oversize=length)
+        body = await reader.readexactly(length) if length else b""
+        return _Request(method, path, headers, body, keep_alive)
+
+    async def _write_response(
+        self, writer, response: _Response, keep_alive: bool
+    ) -> None:
+        status = response.status
+        head = [
+            f"HTTP/1.1 {status.value} {status.phrase}",
+            f"Content-Type: {response.content_type}",
+            f"Content-Length: {len(response.body)}",
+            f"Connection: {'keep-alive' if keep_alive else 'close'}",
+        ]
+        head += [f"{k}: {v}" for k, v in response.extra_headers.items()]
+        writer.write(("\r\n".join(head) + "\r\n\r\n").encode("latin-1"))
+        writer.write(response.body)
+        await writer.drain()
+
+    # -- routing -----------------------------------------------------------
+
+    async def _dispatch(self, request: _Request) -> _Response:
+        try:
+            return await self._route(request)
+        except asyncio.CancelledError:
+            raise
+        except Exception as e:
+            # a handler bug or a teardown race must answer 500, not kill
+            # the connection with no status line
+            return _Response.error(
+                HTTPStatus.INTERNAL_SERVER_ERROR, f"{type(e).__name__}: {e}"
+            )
+
+    async def _route(self, request: _Request) -> _Response:
+        method, path = request.method.upper(), request.path
+        if path == protocol.ROUTE_HEALTH and method == "GET":
+            return self._health()
+        if path == protocol.ROUTE_MODELS and method == "GET":
+            return self._models()
+        if path == protocol.ROUTE_METRICS and method == "GET":
+            return self._metrics()
+        if path.startswith(protocol.ROUTE_MODELS + "/") and path.endswith(
+            protocol.PREDICT_SUFFIX
+        ):
+            name = path[len(protocol.ROUTE_MODELS) + 1 : -len(protocol.PREDICT_SUFFIX)]
+            if method != "POST":
+                return _Response.error(
+                    HTTPStatus.METHOD_NOT_ALLOWED, "predict is POST-only"
+                )
+            return await self._predict(name, request)
+        return _Response.error(HTTPStatus.NOT_FOUND, f"no route {method} {path}")
+
+    def _models(self) -> _Response:
+        models = {}
+        for name in self.registry.names():
+            try:
+                models[name] = self.registry.engine(name).describe()
+            except KeyError:  # racing an unregister
+                continue
+        return _Response.json(HTTPStatus.OK, {"models": models})
+
+    def _health(self) -> _Response:
+        models = {}
+        for name in self.registry.names():
+            try:
+                engine = self.registry.engine(name)
+                batcher = self.registry.batcher(name)
+            except KeyError:  # racing an unregister
+                continue
+            watcher = self.registry.watcher(name)
+            models[name] = {
+                "step": engine.step,
+                "queue_depth": batcher.queue_depth(),
+                "watcher": None if watcher is None else watcher.describe(),
+            }
+        return _Response.json(HTTPStatus.OK, {"status": "ok", "models": models})
+
+    def _metrics(self) -> _Response:
+        out = {}
+        for name in self.registry.names():
+            try:
+                out[name] = self.registry.batcher(name).metrics.snapshot()
+            except KeyError:
+                continue
+        return _Response.json(HTTPStatus.OK, out)
+
+    # -- predict -----------------------------------------------------------
+
+    async def _predict(self, name: str, request: _Request) -> _Response:
+        try:
+            batcher = self.registry.batcher(name)
+        except KeyError:
+            return _Response.error(
+                HTTPStatus.NOT_FOUND,
+                f"unknown model {name!r}",
+                registered=list(self.registry.names()),
+            )
+        n_features = batcher.engine.model.cfg.n_features
+
+        content_type = request.header("content-type", protocol.CT_JSON)
+        content_type = content_type.split(";")[0].strip().lower()
+        single = False
+        try:
+            if content_type == protocol.CT_F32:
+                images = protocol.decode_images(request.body, n_features)
+            elif content_type == protocol.CT_JSON:
+                images, single = protocol.parse_predict_json(
+                    json.loads(request.body or b"{}")
+                )
+            else:
+                return _Response.error(
+                    HTTPStatus.UNSUPPORTED_MEDIA_TYPE,
+                    f"unsupported content type {content_type!r}; "
+                    f"use {protocol.CT_JSON} or {protocol.CT_F32}",
+                )
+            if images.shape[1] != n_features:
+                raise ValueError(
+                    f"model {name!r} takes {n_features} features per image, "
+                    f"got {images.shape[1]}"
+                )
+        except (ValueError, json.JSONDecodeError) as e:
+            return _Response.error(HTTPStatus.BAD_REQUEST, str(e))
+
+        # -- admission: bounded queue depth -> shed loudly ----------------
+        limit = batcher.max_depth
+        if limit is None:
+            limit = self.max_queue_depth
+        if limit is not None and batcher.queue_depth() + len(images) > limit:
+            batcher.metrics.shed(len(images))
+            return _Response.error(
+                HTTPStatus.TOO_MANY_REQUESTS,
+                f"model {name!r} overloaded: queue depth "
+                f"{batcher.queue_depth()} + {len(images)} exceeds {limit}",
+                retry=True,
+            )
+
+        loop = asyncio.get_running_loop()
+        try:
+            # all-or-nothing admission: a race with the depth bound or a
+            # concurrent stop() can't strand a half-submitted batch
+            futures = batcher.submit_block(images)
+        except QueueFull as e:  # batcher-level bound won the race; shed
+            return _Response.error(HTTPStatus.TOO_MANY_REQUESTS, str(e), retry=True)
+        except RuntimeError as e:  # stopping/stopped batcher: reject, 503
+            return _Response.error(HTTPStatus.SERVICE_UNAVAILABLE, str(e))
+        awaitables = [self._bridge(loop, fut) for fut in futures]
+
+        try:
+            labels = await asyncio.wait_for(
+                asyncio.gather(*awaitables), timeout=self.request_timeout_s
+            )
+        except asyncio.TimeoutError:
+            return _Response.error(
+                HTTPStatus.GATEWAY_TIMEOUT,
+                f"request not served within {self.request_timeout_s}s",
+            )
+        except RuntimeError as e:  # batcher stopped without drain mid-flight
+            return _Response.error(HTTPStatus.SERVICE_UNAVAILABLE, str(e))
+        except Exception as e:  # engine failure delivered through the future
+            return _Response.error(
+                HTTPStatus.INTERNAL_SERVER_ERROR, f"{type(e).__name__}: {e}"
+            )
+
+        if protocol.CT_I32 in request.header("accept", ""):
+            return _Response(
+                HTTPStatus.OK, protocol.encode_labels(labels), protocol.CT_I32
+            )
+        if single:
+            return _Response.json(HTTPStatus.OK, {"label": int(labels[0])})
+        return _Response.json(HTTPStatus.OK, {"labels": [int(l) for l in labels]})
+
+    @staticmethod
+    def _bridge(loop: asyncio.AbstractEventLoop, fut) -> asyncio.Future:
+        """ServingFuture (threading) -> asyncio future on `loop`."""
+        afut = loop.create_future()
+
+        def settle(resolved) -> None:
+            if afut.cancelled():
+                return
+            try:
+                afut.set_result(resolved.result(timeout=0))
+            except BaseException as e:
+                afut.set_exception(e)
+
+        fut.add_done_callback(
+            lambda resolved: loop.call_soon_threadsafe(settle, resolved)
+        )
+        return afut

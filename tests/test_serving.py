@@ -222,6 +222,108 @@ def test_batcher_submit_validates_shape():
         batcher.submit(np.zeros((2, 24), np.float32))
 
 
+def test_batcher_restart_after_stop():
+    """Lifecycle edge: a stopped batcher reopens on start() and serves
+    again (the registry keeps entries across reload cycles)."""
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine, max_delay_ms=1.0).start()
+    x = _queries(engine.model.cfg, n=3)
+    first = [f.result(timeout=30.0) for f in batcher.submit_many(x)]
+    batcher.stop()
+    with pytest.raises(RuntimeError, match="batcher is stopped"):
+        batcher.submit(x[0])
+    batcher.start()  # reopen
+    second = [f.result(timeout=30.0) for f in batcher.submit_many(x)]
+    batcher.stop()
+    assert first == second == [int(l) for l in engine.predict(x)]
+
+
+def test_batcher_flush_concurrent_with_drain_thread():
+    """Lifecycle edge: flush() while the drain thread is live — every
+    future resolves exactly once with the right label, whichever thread
+    served it."""
+    import threading
+
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine, max_delay_ms=5.0).start()
+    x = _queries(engine.model.cfg, n=37)
+    futures: list = []
+    stop_flushing = threading.Event()
+
+    def flusher():
+        while not stop_flushing.is_set():
+            batcher.flush()
+
+    flush_thread = threading.Thread(target=flusher)
+    flush_thread.start()
+    try:
+        for img in x:
+            futures.append(batcher.submit(img))
+        got = np.asarray([f.result(timeout=30.0) for f in futures])
+    finally:
+        stop_flushing.set()
+        flush_thread.join()
+        batcher.stop()
+    np.testing.assert_array_equal(got, engine.predict(x))
+    assert batcher.metrics.n_requests == len(x)
+
+
+def test_batcher_concurrent_stops_are_safe():
+    """Two stop() calls racing must not fight over the thread handle."""
+    import threading
+
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine).start()
+    batcher.submit_many(_queries(engine.model.cfg, n=5))
+    threads = [threading.Thread(target=batcher.stop) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert batcher.queue_depth() == 0
+
+
+def test_batcher_max_depth_sheds_loudly():
+    from repro.serving import QueueFull
+
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine, max_depth=2)  # not started: queue holds
+    x = _queries(engine.model.cfg, n=3)
+    futures = [batcher.submit(x[0]), batcher.submit(x[1])]
+    with pytest.raises(QueueFull, match="max_depth"):
+        batcher.submit(x[2])
+    assert batcher.metrics.n_shed == 1
+    assert batcher.queue_depth() == 2  # the bound held
+    batcher.flush()
+    assert all(isinstance(f.result(timeout=0), int) for f in futures)
+
+
+def test_batcher_submit_block_all_or_nothing():
+    """Batch admission is atomic: a block that would cross max_depth is
+    shed whole — no half-submitted prefix left behind (the HTTP batch
+    predict path relies on this)."""
+    from repro.serving import QueueFull
+
+    engine = _engine(batch_size=4)
+    batcher = MicroBatcher(engine, max_depth=4)
+    x = _queries(engine.model.cfg, n=3)
+    futures = batcher.submit_block(x)  # depth 3 <= 4: all admitted
+    assert batcher.queue_depth() == 3
+    with pytest.raises(QueueFull, match="batch shed"):
+        batcher.submit_block(x)  # 3 + 3 > 4: none admitted
+    assert batcher.queue_depth() == 3  # no stranded prefix
+    assert batcher.metrics.n_shed == 3
+    with pytest.raises(ValueError, match=r"\(n, H\) images"):
+        batcher.submit_block(x[0])
+    batcher.flush()
+    got = np.asarray([f.result(timeout=0) for f in futures])
+    np.testing.assert_array_equal(got, engine.predict(x))
+    batcher.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        batcher.submit_block(x)
+    assert batcher.metrics.n_rejected == 3
+
+
 def test_batcher_delivers_engine_errors():
     engine = _engine(batch_size=4)
 
@@ -354,6 +456,35 @@ def test_checkpoint_poll_latest(tmp_path):
 # ---------------------------------------------------------------------------
 # metrics
 # ---------------------------------------------------------------------------
+
+
+def test_metrics_snapshot_json_roundtrip():
+    """Satellite pin: snapshot() is plain ints/floats (no numpy scalars)
+    and survives json.dumps verbatim — the /metrics endpoint contract."""
+    import json
+    import math
+
+    m = ServingMetrics(window=16)
+    m.enqueued(np.int64(3))  # numpy ingress must not leak into counters
+    m.observe_batch(2, 4)
+    m.observe_request(0.01)
+    m.observe_request(0.02)
+    m.shed(np.int32(2))
+    m.rejected()
+    m.dropped(1)
+    snap = m.snapshot()
+    assert snap["n_shed"] == 2 and snap["n_rejected"] == 1
+    for key, value in snap.items():
+        assert type(value) in (int, float), (key, type(value))
+    back = json.loads(json.dumps(snap))
+    for key, value in snap.items():
+        if isinstance(value, float) and math.isnan(value):
+            assert math.isnan(back[key]), key
+        else:
+            assert back[key] == value, key
+    # the empty snapshot (NaN percentiles) round-trips too
+    empty = ServingMetrics().snapshot()
+    assert math.isnan(json.loads(json.dumps(empty))["p99_ms"])
 
 
 def test_metrics_percentiles_and_counters():

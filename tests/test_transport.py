@@ -1,0 +1,432 @@
+"""repro.transport: wire protocol, HTTP parity, admission, watcher.
+
+The acceptance contract (ISSUE 4): labels over the HTTP transport are
+bit-identical to direct `ModelRegistry.submit` / `HDCModel.predict(
+similarity="hamming")` for both `uhd` and `uhd_dynamic` engines,
+including across a watcher-driven table -> dynamic promotion with
+traffic in flight.
+"""
+
+import concurrent.futures
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HDCConfig, HDCModel
+from repro.serving import ModelRegistry, ServingEngine
+from repro.transport import (
+    HdcClient,
+    HdcHttpServer,
+    OverloadedError,
+    ReloadWatcher,
+    TransportError,
+    protocol,
+)
+
+RNG = np.random.default_rng(33)
+
+
+def _cfg(**kw):
+    base = dict(n_features=24, n_classes=4, d=128, levels=16,
+                similarity="hamming")
+    base.update(kw)
+    return HDCConfig(**base)
+
+
+def _trained(cfg, n=32):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return HDCModel.create(cfg).fit(x, y)
+
+
+def _queries(cfg, n=12):
+    return np.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), np.float32)
+
+
+@pytest.fixture
+def stack(request):
+    """(registry, server, client) around one registered model; always
+    torn down server-first (the production stop order)."""
+    registries, servers, clients = [], [], []
+
+    def build(model, name="m", *, batch_size=8, start=True, **server_kw):
+        registry = ModelRegistry()
+        registry.register(name, ServingEngine(model, batch_size=batch_size),
+                          start=start, max_delay_ms=1.0)
+        server = HdcHttpServer(registry, **server_kw).start()
+        client = HdcClient(*server.address)
+        registries.append(registry)
+        servers.append(server)
+        clients.append(client)
+        return registry, server, client
+
+    yield build
+    for client in clients:
+        client.close()
+    for server in servers:
+        server.stop()
+    for registry in registries:
+        registry.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+
+
+def test_protocol_image_roundtrip():
+    images = RNG.uniform(0, 255, (5, 24)).astype(np.float32)
+    body = protocol.encode_images(images)
+    assert len(body) == 5 * 24 * 4
+    np.testing.assert_array_equal(protocol.decode_images(body, 24), images)
+    # single (H,) image becomes one row
+    one = protocol.decode_images(protocol.encode_images(images[0]), 24)
+    np.testing.assert_array_equal(one, images[:1])
+    with pytest.raises(ValueError, match="not a positive multiple"):
+        protocol.decode_images(body[:-3], 24)
+    with pytest.raises(ValueError, match="not a positive multiple"):
+        protocol.decode_images(b"", 24)
+    with pytest.raises(ValueError, match=r"\(n, H\) or \(H,\)"):
+        protocol.encode_images(np.zeros((2, 3, 4)))
+
+
+def test_protocol_label_roundtrip():
+    labels = np.asarray([0, 3, 2, 1], np.int32)
+    np.testing.assert_array_equal(
+        protocol.decode_labels(protocol.encode_labels(labels)), labels
+    )
+    with pytest.raises(ValueError, match="int32-aligned"):
+        protocol.decode_labels(b"\x00\x01\x02")
+
+
+def test_protocol_predict_json_forms():
+    arr, single = protocol.parse_predict_json({"image": [1.0, 2.0]})
+    assert single and arr.shape == (1, 2)
+    arr, single = protocol.parse_predict_json({"images": [[1.0], [2.0]]})
+    assert not single and arr.shape == (2, 1)
+    for bad in ({}, {"image": [1.0], "images": [[1.0]]}, [1.0],
+                {"image": [[1.0]]}, {"images": []}):
+        with pytest.raises(ValueError):
+            protocol.parse_predict_json(bad)
+
+
+# ---------------------------------------------------------------------------
+# HTTP parity: the acceptance contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("encoder", ["uhd", "uhd_dynamic"])
+def test_http_labels_bit_identical_to_direct_paths(stack, encoder):
+    """JSON single, JSON batch, and binary batch all return exactly the
+    labels of direct registry.submit and HDCModel.predict(hamming)."""
+    cfg = _cfg(encoder=encoder)
+    model = _trained(cfg)
+    registry, server, client = stack(model, encoder)
+    q = _queries(cfg)
+
+    direct_model = np.asarray(model.predict(q))
+    direct_submit = np.asarray(
+        [registry.submit(encoder, img).result(timeout=30.0) for img in q]
+    )
+    via_json = np.asarray([client.predict(encoder, img) for img in q])
+    via_json_batch = client.predict_batch(encoder, q, binary=False)
+    via_binary = client.predict_batch(encoder, q, binary=True)
+
+    np.testing.assert_array_equal(direct_submit, direct_model)
+    np.testing.assert_array_equal(via_json, direct_model)
+    np.testing.assert_array_equal(via_json_batch, direct_model)
+    np.testing.assert_array_equal(via_binary, direct_model)
+
+
+def test_http_control_plane(stack):
+    cfg = _cfg()
+    registry, server, client = stack(_trained(cfg), "m")
+    health = client.healthz()
+    assert health["status"] == "ok" and "m" in health["models"]
+    desc = client.models()["m"]
+    assert desc["encoder"] == "uhd" and desc["d"] == cfg.d
+    assert desc["codebook_bytes"] > 0  # the uHD deployment headline
+    client.predict("m", _queries(cfg, n=1)[0])
+    snap = client.metrics()["m"]
+    assert snap["n_requests"] >= 1
+    # came through json.dumps on the server verbatim: plain types only
+    assert all(isinstance(v, (int, float, type(None))) for v in snap.values())
+
+
+def test_http_errors(stack):
+    cfg = _cfg()
+    registry, server, client = stack(
+        _trained(cfg), "m", max_body_bytes=4096, start=False
+    )
+    q = _queries(cfg, n=1)
+
+    with pytest.raises(TransportError, match="unknown model") as e:
+        client.predict("nope", q[0])
+    assert e.value.status == 404
+
+    with pytest.raises(TransportError, match="features per image") as e:
+        client.predict_batch("m", np.zeros((1, 7), np.float32), binary=False)
+    assert e.value.status == 400
+
+    # binary payloads that don't align to the row size fail loudly too
+    with pytest.raises(TransportError, match="not a positive multiple") as e:
+        client.predict_batch("m", np.zeros((1, 7), np.float32))
+    assert e.value.status == 400
+
+    with pytest.raises(TransportError) as e:
+        client._json("POST", protocol.predict_path("m"),
+                     b"not json", {"Content-Type": protocol.CT_JSON})
+    assert e.value.status == 400
+
+    with pytest.raises(TransportError) as e:
+        client._json("POST", protocol.predict_path("m"),
+                     b"x", {"Content-Type": "text/plain"})
+    assert e.value.status == 415
+
+    # oversize payload: refused, unbuffered, connection still usable
+    with pytest.raises(TransportError, match="max_body_bytes") as e:
+        client.predict_batch("m", np.zeros((64, cfg.n_features), np.float32))
+    assert e.value.status == 413
+    assert client.healthz()["status"] == "ok"  # same keep-alive socket
+
+
+def test_http_sheds_on_bounded_queue(stack):
+    """Admission control: queue at max_depth -> 429 + n_shed, never an
+    unbounded backlog.  The batcher is not started, so the queue holds."""
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry = ModelRegistry()
+    batcher = registry.register(
+        "m", ServingEngine(model, batch_size=8), max_depth=2, start=False
+    )
+    server = HdcHttpServer(registry).start()
+    client = HdcClient(*server.address)
+    q = _queries(cfg, n=4)
+    try:
+        fut = registry.submit("m", q[0])  # depth 1
+        with pytest.raises(OverloadedError) as e:
+            client.predict_batch("m", q[1:])  # 1 + 3 > 2: shed pre-submit
+        assert e.value.status == 429
+        batcher.submit(q[1])  # depth 2 == max_depth
+        with pytest.raises(OverloadedError):
+            client.predict("m", q[2])  # batcher-level QueueFull wins the race
+        snap = client.metrics()["m"]
+        assert snap["n_shed"] >= 4 and snap["queue_depth"] == 2
+        batcher.flush()
+        assert isinstance(fut.result(timeout=0), int)
+    finally:
+        client.close()
+        server.stop()
+        registry.shutdown()
+
+
+def test_http_rejects_when_batcher_stopped(stack):
+    cfg = _cfg()
+    registry, server, client = stack(_trained(cfg), "m")
+    registry.batcher("m").stop()
+    with pytest.raises(TransportError, match="stopped") as e:
+        client.predict("m", _queries(cfg, n=1)[0])
+    assert e.value.status == 503
+    assert client.metrics()["m"]["n_rejected"] >= 1
+
+
+def test_server_drain_shutdown_is_idempotent_and_instant(stack):
+    cfg = _cfg()
+    registry, server, client = stack(_trained(cfg), "m")
+    assert client.predict("m", _queries(cfg, n=1)[0]) >= 0
+    t0 = time.perf_counter()
+    server.stop()  # idle keep-alive connection must not hold the drain
+    assert time.perf_counter() - t0 < 5.0
+    server.stop()  # idempotent
+    registry.shutdown()
+    registry.shutdown()  # idempotent
+    assert registry.names() == ()
+
+
+# ---------------------------------------------------------------------------
+# reload watcher
+# ---------------------------------------------------------------------------
+
+
+def test_watcher_promotes_published_steps(tmp_path):
+    cfg = _cfg()
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=4)
+    watcher = ReloadWatcher(registry, "m", interval_s=0.02).start()
+    assert registry.watcher("m") is watcher
+    with pytest.raises(ValueError, match="already has a watcher"):
+        registry.attach_watcher("m", object())
+    try:
+        assert watcher.running()
+        model.partial_fit(*_xy(cfg)).save(tmp_path / "ckpt", step=3)
+        _wait(lambda: registry.engine("m").step == 3)
+        assert watcher.n_promotions == 1 and watcher.last_step == 3
+        assert watcher.describe()["running"]
+    finally:
+        registry.shutdown()
+    assert not watcher.running()  # shutdown stopped the watcher first
+    watcher.stop()  # idempotent
+
+
+def test_watcher_restarts_after_stop(tmp_path):
+    """A stopped watcher start()s again without tripping the registry's
+    one-watcher-per-entry guard (its attachment survives stop())."""
+    cfg = _cfg()
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=4)
+    watcher = ReloadWatcher(registry, "m", interval_s=0.02).start()
+    watcher.stop()
+    assert not watcher.running()
+    try:
+        watcher.start()  # reopen, same attachment
+        assert watcher.running() and registry.watcher("m") is watcher
+        model.partial_fit(*_xy(cfg)).save(tmp_path / "ckpt", step=1)
+        _wait(lambda: registry.engine("m").step == 1)
+    finally:
+        registry.shutdown()
+
+
+def test_server_answers_500_on_handler_bug(stack):
+    """A handler exception (e.g. a teardown race) must produce a 500
+    response, not a dead connection with no status line."""
+    cfg = _cfg()
+    registry, server, client = stack(_trained(cfg), "m")
+
+    def boom():
+        raise RuntimeError("handler fell over")
+
+    registry.names = boom
+    with pytest.raises(TransportError, match="handler fell over") as e:
+        client.healthz()
+    assert e.value.status == 500
+    del registry.names  # restore for fixture teardown
+    assert client.healthz()["status"] == "ok"  # connection survived
+
+
+def test_watcher_attach_requires_registered_entry():
+    registry = ModelRegistry()
+    with pytest.raises(KeyError, match="unknown model"):
+        ReloadWatcher(registry, "ghost").start()
+
+
+def test_queued_requests_survive_watcher_triggered_reload(tmp_path):
+    """Satellite: the never-drop contract under a *watcher-driven* (not
+    manual) promotion — queued futures are served by the new engine."""
+    cfg = _cfg()
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    batcher = registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=4)
+    watcher = ReloadWatcher(registry, "m", interval_s=0.02).start()
+    q = _queries(cfg, n=6)
+    futures = batcher.submit_many(q)  # drain not started: queue holds
+
+    model.convert("uhd_dynamic").save(tmp_path / "ckpt", step=1)
+    _wait(lambda: registry.engine("m").step == 1)
+    assert batcher.queue_depth() == 6  # nothing dropped by the promotion
+    assert registry.engine("m").model.cfg.encoder == "uhd_dynamic"
+
+    batcher.flush()
+    got = np.asarray([f.result(timeout=0) for f in futures])
+    np.testing.assert_array_equal(got, registry.engine("m").predict(q))
+    np.testing.assert_array_equal(got, np.asarray(model.predict(q)))
+    assert batcher.metrics.n_reloads == 1
+    registry.shutdown()
+    assert watcher.n_errors == 0
+
+
+def test_watcher_survives_poll_errors(tmp_path):
+    """A broken checkpoint dir counts an error and keeps polling; the
+    live engine keeps serving."""
+    cfg = _cfg()
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=4)
+    watcher = ReloadWatcher(registry, "m", interval_s=0.02)
+    # a step dir with a manifest but no leaves: poll_latest sees it,
+    # restore blows up
+    bad = tmp_path / "ckpt" / "step_000000007"
+    bad.mkdir()
+    (bad / "manifest.json").write_text(json.dumps(
+        {"step": 7, "leaves": [], "extra": {}, "time": 0.0}))
+    try:
+        assert watcher.poll_once() is None
+        assert watcher.n_errors == 1 and watcher.last_error is not None
+        assert registry.engine("m").step == 0  # still serving step 0
+    finally:
+        registry.shutdown()
+
+
+def test_watcher_promotion_under_inflight_http_traffic(tmp_path):
+    """Acceptance: continuous HTTP traffic across a watcher-driven
+    table -> uhd_dynamic promotion; every label bit-identical to the
+    table model (conversion is exact), and the swap is observable."""
+    cfg = _cfg()
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint(
+        "m", tmp_path / "ckpt", batch_size=8, max_delay_ms=1.0, start=True
+    )
+    watcher = ReloadWatcher(registry, "m", interval_s=0.02).start()
+    server = HdcHttpServer(registry).start()
+    host, port = server.address
+
+    q = _queries(cfg, n=16)
+    expect = np.asarray(model.predict(q))
+    stop = threading.Event()
+    results: list[np.ndarray] = []
+
+    def pound():
+        with HdcClient(host, port, timeout_s=60.0) as client:
+            while not stop.is_set():
+                results.append(client.predict_batch("m", q))
+
+    try:
+        with concurrent.futures.ThreadPoolExecutor(2) as pool:
+            workers = [pool.submit(pound) for _ in range(2)]
+            _wait(lambda: len(results) >= 3)  # traffic flowing on step 0
+            model.convert("uhd_dynamic").save(tmp_path / "ckpt", step=1)
+            _wait(lambda: registry.engine("m").step == 1)
+            n_at_swap = len(results)
+            _wait(lambda: len(results) >= n_at_swap + 3)  # and after it
+            stop.set()
+            for w in workers:
+                w.result(timeout=60.0)
+    finally:
+        server.stop()
+        registry.shutdown()
+
+    assert len(results) >= 6
+    for got in results:  # bit-identical on both sides of the swap
+        np.testing.assert_array_equal(got, expect)
+    assert registry.names() == ()
+    assert watcher.n_promotions == 1
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _xy(cfg, n=16):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return x, y
+
+
+def _wait(cond, timeout_s=30.0, poll_s=0.01):
+    deadline = time.time() + timeout_s
+    while not cond():
+        if time.time() > deadline:
+            raise AssertionError("condition not reached in time")
+        time.sleep(poll_s)
