@@ -1,0 +1,179 @@
+"""Fused vs unfused single-pass training: throughput + peak-HBM proxy.
+
+The paper's training claim is that dynamic unary generation makes class
+bundling cheap: class HVs accumulate straight from generator output, so
+no (B, D) hypervector batch — let alone an (H, D) table — needs to live
+in memory.  This bench measures both halves of that claim for each
+encoder:
+
+  * ``img_per_s`` — jitted steady-state throughput of one
+    ``partial_fit`` step, fused (the backend's registered ``fit_bundle``
+    datapath) vs unfused (same encode backend, then
+    ``bundle_by_class``).
+  * ``temp_bytes`` — XLA's compiled temp-allocation size
+    (``memory_analysis().temp_size_in_bytes``), the peak-HBM proxy.
+    The unfused path must stage the (B, D) int32 hypervector batch
+    (``hv_batch_bytes = B*D*4``); the fused path stages only (C, D)
+    class-sum tiles in its place, so ``unfused_temp - fused_temp``
+    recovers the difference ``(B - C) * D * 4`` — the hypervector batch
+    traded for the accumulator.
+
+Emits ``BENCH_train.json`` (artifacts/bench/), uploaded by CI next to
+the serving/encoding artifacts.  The ``summary`` block pins the
+paper-scale D = 8192 ``uhd_dynamic`` comparison: ``fused_is_fused``
+asserts the fused temp stays at least one hypervector batch below the
+unfused temp.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, save_artifact, table
+from repro.core import HDCConfig, HDCModel, encoding, get_encoder, registry
+from repro.core import hdc_model as hm
+
+H = 784  # MNIST-shaped feature count, like the paper
+C = 10
+
+
+def _fused_backend(encoder: str) -> str:
+    """First backend in the encoder's auto order that registers a fused
+    fit_bundle and is usable here — what a training job actually gets."""
+    enc = get_encoder(encoder)
+    platform = jax.default_backend()
+    order = enc.auto_order.get(platform, enc.auto_order["default"])
+    specs = registry.backend_table()[encoder]
+    for name in order:
+        spec = specs.get(name)
+        if spec and spec.fit_bundle is not None and spec.available(platform):
+            return name
+    raise RuntimeError(f"no fused fit_bundle backend for {encoder!r}")
+
+
+def _make_step(cfg: HDCConfig, backend: str, fused: bool):
+    """One partial_fit step, fused or explicitly unfused, over the *same*
+    encode backend — isolating the fusion, not the datapath choice."""
+    enc = get_encoder(cfg.encoder)
+    spec = registry.backend_table()[cfg.encoder][backend]
+
+    def step(m, x, y):
+        x_q = encoding.quantize_images(x, cfg.levels, cfg.max_intensity)
+        if fused:
+            sums = enc.fit_bundle(cfg, m.codebooks, x_q, y, backend=backend)
+        else:
+            hvs = spec.fn(cfg, m.codebooks, x_q)  # (B, D) batch materialized
+            sums = encoding.bundle_by_class(hvs, y, cfg.n_classes)
+        return m.replace(class_sums=m.class_sums + sums)
+
+    return jax.jit(step)
+
+
+def run(fast: bool = False) -> dict:
+    batch = 64 if fast else 256
+    ds = (1024, 8192) if fast else (1024, 4096, 8192)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 255, (batch, H)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, C, (batch,)), jnp.int32)
+
+    rows_out, rows_print = [], []
+    for encoder in ("uhd", "uhd_dynamic"):
+        backend = _fused_backend(encoder)
+        for d in ds:
+            cfg = HDCConfig(
+                n_features=H, n_classes=C, d=d, encoder=encoder, backend=backend
+            )
+            model = HDCModel.create(cfg)
+            fused_fn = _make_step(cfg, backend, fused=True)
+            unfused_fn = _make_step(cfg, backend, fused=False)
+            temp = {}
+            for tag, fn in (("fused", fused_fn), ("unfused", unfused_fn)):
+                temp[tag] = int(
+                    fn.lower(model, x, y).compile().memory_analysis().temp_size_in_bytes
+                )
+            ips_f = batch / bench(fused_fn, model, x, y)
+            ips_u = batch / bench(unfused_fn, model, x, y)
+            rec = {
+                "encoder": encoder,
+                "backend": backend,
+                "d": d,
+                "batch": batch,
+                "fused_img_per_s": ips_f,
+                "unfused_img_per_s": ips_u,
+                "fused_temp_bytes": temp["fused"],
+                "unfused_temp_bytes": temp["unfused"],
+                "hv_batch_bytes": batch * d * 4,
+            }
+            rows_out.append(rec)
+            rows_print.append(
+                [encoder, backend, d, f"{ips_f:.0f}", f"{ips_u:.0f}",
+                 f"{temp['fused']:,}", f"{temp['unfused']:,}",
+                 f"{batch * d * 4:,}"]
+            )
+    table(
+        f"partial_fit: fused vs unfused (H={H}, B={batch}, "
+        f"{jax.default_backend()})",
+        ["encoder", "backend", "D", "fused img/s", "unfused img/s",
+         "fused temp", "unfused temp", "(B,D) bytes"],
+        rows_print,
+    )
+
+    head = next(
+        r for r in rows_out if r["encoder"] == "uhd_dynamic" and r["d"] == 8192
+    )
+    payload = {
+        "device": jax.default_backend(),
+        "n_features": H,
+        "n_classes": C,
+        "batch": batch,
+        "rows": rows_out,
+        "summary": {
+            "encoder": "uhd_dynamic",
+            "d": 8192,
+            "fused_backend": head["backend"],
+            "fused_img_per_s": head["fused_img_per_s"],
+            "unfused_img_per_s": head["unfused_img_per_s"],
+            "speedup": head["fused_img_per_s"] / head["unfused_img_per_s"],
+            "fused_temp_bytes": head["fused_temp_bytes"],
+            "unfused_temp_bytes": head["unfused_temp_bytes"],
+            "hv_batch_bytes": head["hv_batch_bytes"],
+            # the acceptance gate: the fused dynamic path never stages the
+            # (B, D) hypervector batch the unfused path must allocate — it
+            # stages the (C, D) class sums in its place, so the temp gap
+            # must cover the (B - C) * D * 4 difference (x0.9: XLA's
+            # allocator rounds buffers, a few KB of noise either way)
+            "fused_is_fused": bool(
+                head["unfused_temp_bytes"] - head["fused_temp_bytes"]
+                >= 0.9 * (batch - C) * 8192 * 4
+            ),
+        },
+    }
+    save_artifact("BENCH_train", payload)
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sweep")
+    args = ap.parse_args()
+    payload = run(fast=args.fast)
+    s = payload["summary"]
+    print(
+        f"\nsummary (uhd_dynamic, D=8192): fused {s['fused_img_per_s']:.0f} "
+        f"img/s vs unfused {s['unfused_img_per_s']:.0f} img/s "
+        f"({s['speedup']:.2f}x); temp {s['fused_temp_bytes']:,} vs "
+        f"{s['unfused_temp_bytes']:,} bytes (HV batch {s['hv_batch_bytes']:,}); "
+        f"fused_is_fused={s['fused_is_fused']}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

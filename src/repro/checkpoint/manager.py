@@ -20,10 +20,13 @@ Design points for the 1000-node posture:
   * preemption: install_sigterm_handler() hooks SIGTERM to flush a final
     checkpoint before exit (the standard TPU-preemption contract).
 
-In a true multi-host deployment each host writes only the shards it
-owns (process_index-suffixed files) — single-process here, so arrays
-are fully gathered; the manifest format already carries shard metadata
-to extend to per-host files.
+Multi-host: `save_shard(step, local_tree, process_index=i,
+process_count=n, shard_axes=...)` lets each host write only the slices
+it owns (`leaf_XXXXXX.sNNN.npy`); host 0 stages the manifest and — after
+the caller's inter-host barrier — publishes atomically with
+`finalize_shards(step)`.  `restore` stitches shard files back together
+transparently, so a sharded checkpoint restores on any device count
+(the same elasticity contract as the gathered form).
 """
 
 from __future__ import annotations
@@ -108,6 +111,124 @@ class CheckpointManager:
         tmp.rename(final)  # atomic publish
         self._gc()
 
+    def save_shard(
+        self,
+        step: int,
+        tree: Tree,
+        *,
+        process_index: int,
+        process_count: int,
+        shard_axes: dict[str, int],
+        extra: dict | None = None,
+    ):
+        """Write one host's shard of a multi-host checkpoint.
+
+        `tree` is this host's *local* view: leaves whose flat key appears
+        in `shard_axes` (key -> sharded axis) hold this host's slice and
+        are written as `leaf_XXXXXX.s{process_index:03d}.npy`; all other
+        leaves are replicated and written by host 0 only, which also
+        stages the manifest (shard metadata: file stem, shard count,
+        axis, per-shard shape).  Files land in the step's `.tmp` staging
+        dir and stay invisible to readers until `finalize_shards(step)`
+        renames it — called by host 0 once every host has returned from
+        its `save_shard` (the inter-host barrier is the caller's;
+        single-process simulations simply call this once per virtual
+        host, then finalize).  Host 0's call also clears any stale
+        staging dir from an aborted earlier attempt (`begin_shards`),
+        so host 0 must write first — otherwise stale shard files could
+        satisfy finalize's completeness check and publish a torn mix of
+        two attempts.
+        """
+        if not 0 <= process_index < process_count:
+            raise ValueError(f"process_index {process_index} not in [0, {process_count})")
+        tmp = self.root / f"step_{step:09d}.tmp"
+        if process_index == 0:
+            self.begin_shards(step)
+        else:
+            tmp.mkdir(parents=True, exist_ok=True)
+        flat, _ = _flatten_with_paths(tree)
+        unknown = set(shard_axes) - {k for k, _ in flat}
+        if unknown:
+            raise KeyError(f"shard_axes names unknown leaves: {sorted(unknown)}")
+        manifest = {
+            "step": step, "leaves": [], "extra": extra or {},
+            "time": time.time(), "process_count": process_count,
+        }
+        for i, (key, leaf) in enumerate(flat):
+            sharded = key in shard_axes
+            if not sharded and process_index != 0:
+                # replicated leaf, host 0's to write: skip the
+                # device->host transfer entirely
+                continue
+            arr = np.asarray(jax.device_get(leaf))
+            logical_dtype = str(arr.dtype)
+            if logical_dtype == "bfloat16":  # numpy can't persist bf16
+                arr = arr.view(np.uint16)
+            if sharded:
+                np.save(tmp / f"leaf_{i:06d}.s{process_index:03d}.npy", arr)
+            else:
+                np.save(tmp / f"leaf_{i:06d}.npy", arr)
+            if process_index == 0:  # only host 0's manifest is ever written
+                meta = {"key": key, "file": f"leaf_{i:06d}.npy",
+                        "shape": list(arr.shape), "dtype": logical_dtype}
+                if sharded:
+                    meta.update(
+                        file=f"leaf_{i:06d}", shards=process_count,
+                        axis=int(shard_axes[key]),
+                    )
+                manifest["leaves"].append(meta)
+        if process_index == 0:
+            with open(tmp / "manifest.json", "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+
+    def begin_shards(self, step: int):
+        """Start a sharded save attempt: clear any stale staging dir left
+        by an aborted earlier attempt, so finalize_shards can never
+        publish a checkpoint mixing shard files from two attempts.  Host
+        0's `save_shard` calls this implicitly; in a real multi-host
+        deployment host 0 must therefore run (or `begin_shards` be
+        called) *before* the barrier that releases the other hosts'
+        writes."""
+        tmp = self.root / f"step_{step:09d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+    def finalize_shards(self, step: int):
+        """Atomic publish of a sharded save: verify every file the staged
+        manifest lists exists (a missing shard means a host has not
+        written yet — refuse loudly rather than publish a torn
+        checkpoint), then rename `.tmp` -> final."""
+        tmp = self.root / f"step_{step:09d}.tmp"
+        manifest_path = tmp / "manifest.json"
+        if not manifest_path.exists():
+            raise FileNotFoundError(
+                f"no staged manifest for step {step} under {tmp} "
+                "(host 0 has not called save_shard yet)"
+            )
+        manifest = json.loads(manifest_path.read_text())
+        missing = []
+        for m in manifest["leaves"]:
+            if "shards" in m:
+                missing += [
+                    f"{m['file']}.s{s:03d}.npy"
+                    for s in range(m["shards"])
+                    if not (tmp / f"{m['file']}.s{s:03d}.npy").exists()
+                ]
+            elif not (tmp / m["file"]).exists():
+                missing.append(m["file"])
+        if missing:
+            raise FileNotFoundError(
+                f"step {step} is missing shard files {missing[:8]} — every "
+                "host must save_shard before finalize_shards publishes"
+            )
+        final = self.root / f"step_{step:09d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+
     def wait(self):
         if self._thread is not None:
             self._thread.join()
@@ -171,7 +292,16 @@ class CheckpointManager:
             meta = by_key.get(key)
             if meta is None:
                 raise KeyError(f"checkpoint {step} missing leaf {key!r}")
-            arr = np.load(d / meta["file"])
+            if meta.get("shards"):  # stitch per-host shard files
+                arr = np.concatenate(
+                    [
+                        np.load(d / f"{meta['file']}.s{s:03d}.npy")
+                        for s in range(meta["shards"])
+                    ],
+                    axis=meta["axis"],
+                )
+            else:
+                arr = np.load(d / meta["file"])
             if meta["dtype"] == "bfloat16":
                 import ml_dtypes
 
@@ -188,6 +318,14 @@ class CheckpointManager:
     def extra(self, step: int) -> dict:
         d = self.root / f"step_{step:09d}"
         return json.loads((d / "manifest.json").read_text()).get("extra", {})
+
+    def leaf_meta(self, step: int) -> dict[str, dict]:
+        """Manifest metadata per flat leaf key (shape/dtype/shard info) —
+        lets callers adapt their restore template to what a checkpoint
+        actually stores (e.g. pre-split-counter scalar `n_seen`)."""
+        d = self.root / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        return {m["key"]: m for m in manifest["leaves"]}
 
 
 def install_sigterm_handler(save_fn: Callable[[], None]):

@@ -20,7 +20,7 @@ from repro.core.model import (  # noqa: F401
     baseline_iterative_search,
     train_and_eval,
 )
-from repro.core.hdc_model import HDCModel  # noqa: F401
+from repro.core.hdc_model import HDCModel, partial_fit_sharded  # noqa: F401
 from repro.core.registry import (  # noqa: F401
     BackendUnavailableError,
     Encoder,
@@ -30,6 +30,7 @@ from repro.core.registry import (  # noqa: F401
     get_encoder,
     register_backend,
     register_encoder,
+    register_fit_bundle,
     resolve_backend,
 )
 from repro.core import encoders as _builtin_encoders  # noqa: F401  (registers)

@@ -34,7 +34,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import encoding, sobol
-from repro.core.registry import EncoderBase, register_backend, register_encoder
+from repro.core.registry import (
+    EncoderBase,
+    register_backend,
+    register_encoder,
+    register_fit_bundle,
+)
 
 if TYPE_CHECKING:
     from repro.core.model import HDCConfig
@@ -157,6 +162,28 @@ def _uhd_unary_oracle(cfg, books, x_q):
     )
 
 
+# Fused training datapaths (DESIGN.md §9).  `d` and `point_offset` are
+# ignored by the table forms: a D-sharded table arrives pre-sliced in
+# `books["sobol"]`, which already fixes both the local width and the
+# offset; only generator-backed encoders consume them.
+
+
+@register_fit_bundle("uhd", "blocked")
+def _uhd_blocked_fit_bundle(cfg, books, x_q, labels, *, d, point_offset):
+    """Pure-JAX D-tile-scan fused training twin ((C, dt) per tile)."""
+    from repro.kernels import ref as kref  # pure-jnp building block
+
+    return kref.fit_bundle(x_q, books["sobol"], labels, cfg.n_classes)
+
+
+@register_fit_bundle("uhd", "pallas")
+def _uhd_pallas_fit_bundle(cfg, books, x_q, labels, *, d, point_offset):
+    """Fused Pallas encode+bundle+class-sum kernel."""
+    from repro.kernels import ops  # local import: kernels are optional
+
+    return ops.fit_bundle(x_q, books["sobol"], labels, cfg.n_classes)
+
+
 # ---------------------------------------------------------------------------
 # uHD dynamic: table-free Sobol generation (the paper's headline theme)
 # ---------------------------------------------------------------------------
@@ -188,6 +215,9 @@ class UHDDynamicEncoder(UHDEncoder):
         "tpu": ("pallas", "ref"),
         "default": ("ref", "pallas"),
     }
+    # The codebook is a generator, not a table: D-sharded training hands
+    # each shard its point_offset into the Sobol stream (DESIGN.md §9).
+    dynamic_generator = True
 
     def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
         dirs = sobol.quantized_direction_matrix(
@@ -221,6 +251,28 @@ def _uhd_dynamic_pallas(cfg, books, x_q):
 
     return ops.encode_bundle_dynamic(
         x_q, books["direction"], cfg.d, skip=cfg.sobol_skip
+    )
+
+
+@register_fit_bundle("uhd_dynamic", "ref")
+def _uhd_dynamic_ref_fit_bundle(cfg, books, x_q, labels, *, d, point_offset):
+    """Pure-JAX table-free fused training (tile-scan generation)."""
+    from repro.kernels import ref as kref  # pure-jnp building block
+
+    skip = cfg.sobol_skip if point_offset is None else cfg.sobol_skip + point_offset
+    return kref.fit_bundle_dynamic(
+        x_q, books["direction"], labels, cfg.n_classes, d, skip=skip
+    )
+
+
+@register_fit_bundle("uhd_dynamic", "pallas")
+def _uhd_dynamic_pallas_fit_bundle(cfg, books, x_q, labels, *, d, point_offset):
+    """Fused Pallas training kernel with in-VMEM Sobol generation."""
+    from repro.kernels import ops  # local import: kernels are optional
+
+    skip = cfg.sobol_skip if point_offset is None else cfg.sobol_skip + point_offset
+    return ops.fit_bundle_dynamic(
+        x_q, books["direction"], labels, cfg.n_classes, d, skip=skip
     )
 
 

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from pathlib import Path
 from typing import Any, Iterable
 
@@ -39,6 +40,50 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import encoding, metrics, registry, unary
 from repro.core.model import HDCConfig
+
+
+# ---------------------------------------------------------------------------
+# n_seen: a (2,) uint32 [hi, lo] split counter.  jnp canonicalizes int64 to
+# int32 unless the global x64 flag is flipped (which would change dtype
+# promotion everywhere), so a plain scalar would wrap negative after ~2.1B
+# streamed examples — corrupting every n_seen-derived statistic and the
+# checkpoint round-trip.  Two uint32 words with an explicit carry are exact
+# to 2**64 under any jax config.
+# ---------------------------------------------------------------------------
+
+_NSEEN_DTYPE = jnp.uint32
+
+
+def _nseen_array(n) -> jax.Array:
+    """Normalize a count into the (2,) uint32 [hi, lo] representation.
+
+    Accepts python ints (any size below 2**64), () scalars (legacy
+    checkpoints / call sites), or an existing (2,) split counter.
+    """
+    if isinstance(n, (jax.Array, np.ndarray)):
+        a = jnp.asarray(n)
+        if a.shape == (2,):
+            return a.astype(_NSEEN_DTYPE)
+        if a.shape == ():
+            n = int(a)
+        else:
+            raise ValueError(f"n_seen must be a scalar or (2,) counter, got {a.shape}")
+    n = int(n)
+    if not 0 <= n < 1 << 64:
+        raise ValueError(f"n_seen must be in [0, 2**64), got {n}")
+    return jnp.asarray([n >> 32, n & 0xFFFFFFFF], _NSEEN_DTYPE)
+
+
+def _nseen_add(ns: jax.Array, count: int) -> jax.Array:
+    """ns + count with an explicit carry (count is a static batch size)."""
+    lo = ns[1] + jnp.uint32(count & 0xFFFFFFFF)
+    carry = (lo < ns[1]).astype(_NSEEN_DTYPE)  # uint32 add wrapped
+    return jnp.stack([ns[0] + jnp.uint32(count >> 32) + carry, lo])
+
+
+def _nseen_int(ns) -> int:
+    hi, lo = np.asarray(ns)
+    return (int(hi) << 32) | int(lo)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -55,7 +100,7 @@ class HDCModel:
     cfg: HDCConfig
     codebooks: dict[str, jax.Array]
     class_sums: jax.Array  # (C, D) int32 raw bundling accumulator
-    n_seen: jax.Array  # () int32 examples accumulated so far
+    n_seen: jax.Array  # (2,) uint32 [hi, lo] split example counter (see above)
 
     # -- pytree protocol -------------------------------------------------
 
@@ -108,7 +153,7 @@ class HDCModel:
             cfg=cfg,
             codebooks=codebooks,
             class_sums=class_sums,
-            n_seen=jnp.asarray(n_seen, jnp.int32),
+            n_seen=_nseen_array(n_seen),
         )
 
     # -- derived state ---------------------------------------------------
@@ -123,6 +168,15 @@ class HDCModel:
     @property
     def encoder(self) -> registry.EncoderBase:
         return registry.get_encoder(self.cfg.encoder)
+
+    @property
+    def n_examples(self) -> int:
+        """Total examples accumulated, as a python int (exact to 2**64).
+
+        Host-side view of the ``n_seen`` split counter; inside a traced
+        function use ``n_seen`` itself (the (2,) uint32 array).
+        """
+        return _nseen_int(self.n_seen)
 
     def pack(self) -> jax.Array:
         """Class HVs binarized (per `pack_center`) and packed 32 dims/word.
@@ -153,18 +207,42 @@ class HDCModel:
 
     def fit(self, images: jax.Array, labels: jax.Array) -> "HDCModel":
         """Single-pass training on this data alone (accumulator reset)."""
-        return fit(self, jnp.asarray(images), jnp.asarray(labels))
+        labels = jnp.asarray(labels)
+        encoding.validate_labels(labels, self.cfg.n_classes)
+        return fit(self, jnp.asarray(images), labels)
 
-    def partial_fit(self, images: jax.Array, labels: jax.Array) -> "HDCModel":
-        """Streaming training: accumulate one batch into the class sums."""
-        return partial_fit(self, jnp.asarray(images), jnp.asarray(labels))
+    def partial_fit(
+        self, images: jax.Array, labels: jax.Array, *, donate: bool = False
+    ) -> "HDCModel":
+        """Streaming training: accumulate one batch into the class sums.
+
+        Labels are validated on the host before tracing (out-of-range
+        labels raise instead of being silently dropped — see
+        ``encoding.bundle_by_class`` for the jitted contract).  With
+        ``donate=True`` this model's ``class_sums``/``n_seen`` buffers
+        are donated to XLA and updated in place — no (C, D) re-allocation
+        per step; the codebooks are never donated (they are shared,
+        read-only state).  The donor model must not be used afterwards.
+        """
+        images, labels = jnp.asarray(images), jnp.asarray(labels)
+        encoding.validate_labels(labels, self.cfg.n_classes)
+        if not donate:
+            return partial_fit(self, images, labels)
+        sums, ns = _partial_fit_donated(
+            _stateless(self), self.class_sums, self.n_seen, images, labels
+        )
+        return self.replace(class_sums=sums, n_seen=ns)
 
     def fit_batches(self, batches: Iterable[tuple[Any, Any]]) -> "HDCModel":
         """Memory-bounded fit over an iterator of (images, labels) —
-        identical semantics to `fit` on the concatenated data."""
+        identical semantics to `fit` on the concatenated data.  The
+        streaming state is donated between steps, so the (C, D)
+        accumulator is updated in place instead of re-allocated per
+        batch (this model's own buffers are untouched: the stream
+        starts from a fresh `reset` copy)."""
         model = self.reset()
         for images, labels in batches:
-            model = model.partial_fit(images, labels)
+            model = model.partial_fit(images, labels, donate=True)
         return model
 
     def reset(self) -> "HDCModel":
@@ -254,6 +332,68 @@ class HDCModel:
             extra={"hdc_config": raw_cfg},
         )
 
+    def save_shard(
+        self,
+        path: str | Path,
+        *,
+        step: int = 0,
+        process_index: int,
+        process_count: int,
+        keep_n: int = 3,
+    ) -> None:
+        """Write this host's slice of a multi-host checkpoint.
+
+        Arrays with a trailing D axis (``class_sums`` and D-wide
+        codebooks such as the uHD threshold table) are written as
+        per-host shard files holding this host's D-slice; replicated
+        leaves (``n_seen``, the tiny ``uhd_dynamic`` direction matrix)
+        are written by host 0 alone, which also stages the manifest.
+        Nothing becomes visible to readers until — after every host has
+        called this (the inter-host barrier is the caller's) — host 0
+        publishes atomically with
+        ``CheckpointManager(path).finalize_shards(step)``.
+        ``HDCModel.load`` then restores the stitched checkpoint
+        bit-identically, on any device count.
+
+        In this single-process repro the method is also the simulation
+        hook: call it once per virtual host from one process (each call
+        slices this model's full arrays) and then finalize.
+        """
+        from repro.checkpoint.manager import CheckpointManager, _flatten_with_paths
+
+        d = self.cfg.d
+        if d % process_count:
+            raise ValueError(
+                f"d={d} does not divide over {process_count} checkpoint shards"
+            )
+        chunk = d // process_count
+        sl = slice(process_index * chunk, (process_index + 1) * chunk)
+
+        def local(leaf):
+            shape = tuple(getattr(leaf, "shape", ()))
+            if shape and shape[-1] == d:
+                return leaf[..., sl]
+            return leaf
+
+        state = jax.tree_util.tree_map(local, self._state_tree())
+        flat, _ = _flatten_with_paths(self._state_tree())
+        shard_axes = {
+            key: np.ndim(leaf) - 1
+            for key, leaf in flat
+            if np.ndim(leaf) and tuple(np.shape(leaf))[-1] == d
+        }
+        raw_cfg = dataclasses.asdict(self.cfg)
+        raw_cfg.pop("use_kernels", None)
+        raw_cfg.pop("encode_impl", None)
+        CheckpointManager(path, keep_n=keep_n).save_shard(
+            step,
+            state,
+            process_index=process_index,
+            process_count=process_count,
+            shard_axes=shard_axes,
+            extra={"hdc_config": raw_cfg},
+        )
+
     @classmethod
     def load(
         cls,
@@ -279,14 +419,25 @@ class HDCModel:
         cfg = HDCConfig(**raw)
         # abstract template: restore needs only structure + shapes, so the
         # codebooks (host-side Sobol generation for uHD) are never built
+        # legacy checkpoints stored n_seen as a () int32 scalar; restore
+        # with the shape actually on disk, then normalize to the split
+        # counter (HDCModel.from_parts / _nseen_array)
+        nseen_shape = tuple(
+            mgr.leaf_meta(step).get("n_seen", {}).get("shape", (2,))
+        )
         like = cls(
             cfg=cfg,
             codebooks=registry.get_encoder(cfg.encoder).codebook_specs(cfg),
             class_sums=jax.ShapeDtypeStruct((cfg.n_classes, cfg.d), jnp.int32),
-            n_seen=jax.ShapeDtypeStruct((), jnp.int32),
+            n_seen=(
+                jax.ShapeDtypeStruct((), jnp.int32)
+                if nseen_shape == ()
+                else jax.ShapeDtypeStruct((2,), _NSEEN_DTYPE)
+            ),
         )
         shardings = like.shardings(mesh)._state_tree() if mesh is not None else None
         state = mgr.restore(step, like._state_tree(), shardings=shardings)
+        state["n_seen"] = _nseen_array(state["n_seen"])
         return cls(cfg=cfg, **state)
 
     # -- distribution ----------------------------------------------------
@@ -298,20 +449,14 @@ class HDCModel:
         (when present and dividing — the same graceful-fallback contract
         as repro.distributed.sharding); everything else replicates.
         """
-        from repro.distributed.sharding import ShardingRules
+        from repro.distributed.sharding import ShardingRules, model_axis_for
 
         rules = rules or ShardingRules()
-        axis = rules.model_axis if rules.model_axis in mesh.axis_names else None
-        msize = mesh.shape[axis] if axis else 1
+        axis = model_axis_for(mesh, self.cfg.d, rules=rules)
 
         def spec(leaf) -> NamedSharding:
             shape = tuple(getattr(leaf, "shape", ()))
-            if (
-                axis
-                and shape
-                and shape[-1] == self.cfg.d
-                and shape[-1] % msize == 0
-            ):
+            if axis and shape and shape[-1] == self.cfg.d:
                 return NamedSharding(mesh, P(*([None] * (len(shape) - 1)), axis))
             return NamedSharding(mesh, P())
 
@@ -335,25 +480,159 @@ def _encode(model: HDCModel, images: jax.Array) -> jax.Array:
     return enc.encode(cfg, model.codebooks, x_q, backend=cfg.backend)
 
 
-@jax.jit
-def partial_fit(model: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
-    """Accumulate one batch of bundled class sums into the model."""
-    hvs = _encode(model, images)
-    sums = encoding.bundle_by_class(hvs, labels, model.cfg.n_classes)
+def _fit_sums(model: HDCModel, images: jax.Array, labels: jax.Array) -> jax.Array:
+    """One batch -> (C, D) int32 class sums via the encoder's fit_bundle
+    dispatch: fused encode+bundle when the resolved backend registers it
+    (the (B, D) hypervector batch never materializes), bit-identical
+    encode-then-bundle_by_class otherwise (DESIGN.md §9)."""
+    cfg = model.cfg
+    x_q = encoding.quantize_images(images, cfg.levels, cfg.max_intensity)
+    enc = registry.get_encoder(cfg.encoder)
+    return enc.fit_bundle(cfg, model.codebooks, x_q, labels, backend=cfg.backend)
+
+
+def _partial_fit(model: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
     return model.replace(
-        class_sums=model.class_sums + sums,
-        n_seen=model.n_seen + jnp.asarray(labels.shape[0], jnp.int32),
+        class_sums=model.class_sums + _fit_sums(model, images, labels),
+        n_seen=_nseen_add(model.n_seen, labels.shape[0]),
     )
 
 
-@jax.jit
-def fit(model: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
-    """Single-pass training from scratch: reset, encode, bundle."""
-    hvs = _encode(model, images)
-    sums = encoding.bundle_by_class(hvs, labels, model.cfg.n_classes)
+partial_fit = jax.jit(_partial_fit)
+partial_fit.__doc__ = "Accumulate one batch of bundled class sums into the model."
+
+
+def _stateless(model: HDCModel) -> HDCModel:
+    """The model with its mutable training state swapped for empty
+    placeholders — passed *un-donated* alongside the donated state so
+    the shared, read-only codebooks are never invalidated by donation."""
     return model.replace(
-        class_sums=sums, n_seen=jnp.asarray(labels.shape[0], jnp.int32)
+        class_sums=jnp.zeros((0,), jnp.int32),
+        n_seen=jnp.zeros((0,), _NSEEN_DTYPE),
     )
+
+
+@functools.partial(jax.jit, donate_argnums=(1, 2))
+def _partial_fit_donated(
+    stateless: HDCModel,
+    class_sums: jax.Array,
+    n_seen: jax.Array,
+    images: jax.Array,
+    labels: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """partial_fit with the training state donated: XLA aliases the
+    (C, D) accumulator input to its output, so streaming training
+    updates in place instead of re-allocating every step."""
+    model = stateless.replace(class_sums=class_sums, n_seen=n_seen)
+    out = _partial_fit(model, images, labels)
+    return out.class_sums, out.n_seen
+
+
+def _fit(model: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
+    return model.replace(
+        class_sums=_fit_sums(model, images, labels),
+        n_seen=_nseen_array(labels.shape[0]),
+    )
+
+
+fit = jax.jit(_fit)
+fit.__doc__ = "Single-pass training from scratch: reset, encode, bundle."
+
+
+# ---------------------------------------------------------------------------
+# Multi-host training: shard_map with explicit batch-axis psum (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_partial_fit_fn(cfg: HDCConfig, mesh: Mesh, rules):
+    """Build (and cache, keyed by config/mesh/rules) the jitted shard_map
+    partial_fit step.  See `partial_fit_sharded` for the semantics."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.distributed.sharding import model_axis_for
+
+    batch_axes = rules.batch_axes(mesh)
+    bsz = math.prod(mesh.shape[a] for a in batch_axes) if batch_axes else 1
+    model_axis = model_axis_for(mesh, cfg.d, rules=rules)
+    d_local = cfg.d // (mesh.shape[model_axis] if model_axis else 1)
+    enc = registry.get_encoder(cfg.encoder)
+
+    like = HDCModel(
+        cfg=cfg,
+        codebooks=enc.codebook_specs(cfg),
+        class_sums=jax.ShapeDtypeStruct((cfg.n_classes, cfg.d), jnp.int32),
+        n_seen=jax.ShapeDtypeStruct((2,), _NSEEN_DTYPE),
+    )
+    mspecs = jax.tree_util.tree_map(lambda ns: ns.spec, like.shardings(mesh, rules=rules))
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+
+    def step(m: HDCModel, images: jax.Array, labels: jax.Array) -> HDCModel:
+        x_q = encoding.quantize_images(images, cfg.levels, cfg.max_intensity)
+        point_offset = None
+        if model_axis is not None and enc.dynamic_generator:
+            # each shard Gray-codes only the Sobol points of its D-slice
+            point_offset = jax.lax.axis_index(model_axis) * d_local
+        sums = enc.fit_bundle(
+            cfg, m.codebooks, x_q, labels,
+            backend=cfg.backend, d=d_local, point_offset=point_offset,
+        )
+        if batch_axes:
+            sums = jax.lax.psum(sums, batch_axes)
+        # the global batch is static (local rows x batch-mesh size), so the
+        # counter add needs no collective and stays replicated
+        return m.replace(
+            class_sums=m.class_sums + sums,
+            n_seen=_nseen_add(m.n_seen, labels.shape[0] * bsz),
+        )
+
+    fn = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(mspecs, P(bspec, None), P(bspec)),
+        out_specs=mspecs,
+        check_rep=False,
+    )
+    return jax.jit(fn), bsz
+
+
+def partial_fit_sharded(
+    model: HDCModel,
+    images: jax.Array,
+    labels: jax.Array,
+    *,
+    mesh: Mesh,
+    rules=None,
+) -> HDCModel:
+    """The true multi-host `partial_fit`: shard_map with explicit
+    collectives instead of GSPMD inference.
+
+    The image batch shards over the ``("pod", "data")`` mesh axes; every
+    device computes the (C, D_local) class sums of its shard through the
+    fused ``fit_bundle`` datapath and the partial sums reduce with **one
+    explicit psum of (C, D_local)** — the entire cross-device traffic of
+    a training step.  When the ``"model"`` axis divides D, the class
+    sums (and any D-wide codebook, e.g. the uHD threshold table) are
+    D-partitioned; the ``uhd_dynamic`` generator then runs *per
+    D-slice*: each device Gray-codes only the Sobol points
+    ``[skip + offset, skip + offset + D_local)`` of its slice, with the
+    tiny (H, 32) direction matrix replicated — pure compute
+    partitioning.  All arithmetic is integer, so the result is
+    bit-identical to single-device ``partial_fit`` on the gathered
+    batch.
+    """
+    from repro.distributed.sharding import ShardingRules
+
+    rules = rules or ShardingRules()
+    images, labels = jnp.asarray(images), jnp.asarray(labels)
+    encoding.validate_labels(labels, model.cfg.n_classes)
+    fn, bsz = _sharded_partial_fit_fn(model.cfg, mesh, rules)
+    if images.shape[0] % bsz:
+        raise ValueError(
+            f"global batch {images.shape[0]} must divide the {bsz}-way "
+            f"batch mesh axes {rules.batch_axes(mesh)}"
+        )
+    return fn(model, images, labels)
 
 
 def _centered(cfg: HDCConfig, hv: jax.Array) -> jax.Array:

@@ -38,6 +38,14 @@ if TYPE_CHECKING:  # only for annotations; avoids a model <-> registry cycle
     from repro.core.model import HDCConfig
 
 BackendFn = Callable[..., jax.Array]  # (cfg, codebooks, x_q) -> (B, D) int32
+#: Fused training datapath of one backend (DESIGN.md §9):
+#: (cfg, codebooks, x_q, labels, *, d, point_offset) -> (C, d) int32 class
+#: sums, integer-exact and bit-identical to encode-then-bundle_by_class.
+#: `d` is the local output width (cfg.d, or the D-slice width under
+#: "model"-axis sharding); `point_offset` is the slice's start within the
+#: generated Sobol stream (may be traced — only generator-backed encoders
+#: consume it; table backends carry the offset in their sliced codebook).
+FitBundleFn = Callable[..., jax.Array]
 AvailabilityProbe = Callable[[str], bool]  # platform -> usable?
 
 
@@ -64,6 +72,10 @@ class BackendSpec:
     fn: BackendFn
     available: AvailabilityProbe
     doc: str = ""
+    #: Optional fused training datapath (see FitBundleFn).  Backends
+    #: without one fall back to encode-then-bundle_by_class in
+    #: EncoderBase.fit_bundle — same class sums, one extra (B, D) pass.
+    fit_bundle: FitBundleFn | None = None
 
 
 _ENCODERS: dict[str, "EncoderBase"] = {}
@@ -100,6 +112,12 @@ class EncoderBase:
     #: if/elif on encoder names.
     default_class_binarize: str = "sign"
     default_pack_center: str = "none"
+    #: True when the encoder's codebook is a *generator* (thresholds
+    #: derived at encode time) rather than a materialized table.  D-axis
+    #: sharded training must then hand each shard its `point_offset`
+    #: into the generated stream; table encoders get a pre-sliced
+    #: codebook instead and never need one.
+    dynamic_generator: bool = False
 
     def build_codebooks(self, cfg: "HDCConfig") -> dict[str, jax.Array]:
         raise NotImplementedError
@@ -120,8 +138,52 @@ class EncoderBase:
         resolved = resolve_backend(backend, encoder=self.name)
         return _BACKENDS[self.name][resolved].fn(cfg, codebooks, x_q)
 
+    def fit_bundle(
+        self, cfg: "HDCConfig", codebooks: dict[str, jax.Array], x_q: jax.Array,
+        labels: jax.Array, *, backend: str = "auto", d: int | None = None,
+        point_offset=None,
+    ) -> jax.Array:
+        """Quantized features + labels -> (C, d) int32 class sums.
+
+        The training hot loop's single dispatch point (DESIGN.md §9):
+        when the resolved backend registers a fused ``fit_bundle``
+        datapath, encode and per-class bundling run in one pass and the
+        (B, d) hypervector batch never materializes; otherwise the step
+        falls back to encode followed by the integer-exact
+        ``bundle_by_class``.  Both routes produce bit-identical sums.
+
+        ``d`` (default ``cfg.d``) is the local output width and
+        ``point_offset`` the shard's start within the generated Sobol
+        stream — the D-axis sharding hooks (see FitBundleFn).  A
+        nonzero ``point_offset`` requires a fused datapath: the
+        fallback cannot re-aim a generator-backed encode at a D-slice.
+        """
+        resolved = resolve_backend(backend, encoder=self.name)
+        spec = _BACKENDS[self.name][resolved]
+        if spec.fit_bundle is not None:
+            return spec.fit_bundle(
+                cfg, codebooks, x_q, labels,
+                d=cfg.d if d is None else d, point_offset=point_offset,
+            )
+        if point_offset is not None:
+            raise BackendUnavailableError(
+                f"backend {resolved!r} of encoder {self.name!r} registers no "
+                "fused fit_bundle datapath; sharded generator D-slices "
+                "(point_offset) require one"
+            )
+        from repro.core import encoding  # deferred: avoids an import cycle
+
+        hvs = spec.fn(cfg, codebooks, x_q)
+        return encoding.bundle_by_class(hvs, labels, cfg.n_classes)
+
     def backends(self) -> tuple[str, ...]:
         return tuple(sorted(_BACKENDS.get(self.name, {})))
+
+    def has_fit_bundle(self, backend: str = "auto", platform: str | None = None) -> bool:
+        """Does the resolved backend run training fused?  (Introspection
+        for benchmarks/tests; dispatch itself just falls back.)"""
+        resolved = resolve_backend(backend, platform, encoder=self.name)
+        return _BACKENDS[self.name][resolved].fit_bundle is not None
 
 
 def register_encoder(name: str) -> Callable[[type], type]:
@@ -150,6 +212,29 @@ def register_backend(
             fn=fn,
             available=available or (lambda platform: True),
             doc=doc_lines[0] if doc_lines else "",
+        )
+        return fn
+
+    return deco
+
+
+def register_fit_bundle(
+    encoder: str, backend: str
+) -> Callable[[FitBundleFn], FitBundleFn]:
+    """Function decorator: attach a fused training datapath to an
+    already-registered backend (see FitBundleFn for the contract).
+    Registration stays purely additive — dispatch code never changes."""
+
+    def deco(fn: FitBundleFn) -> FitBundleFn:
+        table = _BACKENDS.get(encoder, {})
+        if backend not in table:
+            raise ValueError(
+                f"register_fit_bundle({encoder!r}, {backend!r}): backend is "
+                f"not registered (have {sorted(table)}); register the encode "
+                "datapath first"
+            )
+        _BACKENDS[encoder][backend] = dataclasses.replace(
+            table[backend], fit_bundle=fn
         )
         return fn
 

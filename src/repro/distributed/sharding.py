@@ -118,6 +118,21 @@ class ShardingRules:
         return NamedSharding(mesh, self.activation_spec(ndim, mesh))
 
 
+def model_axis_for(
+    mesh: Mesh, dim: int, *, rules: ShardingRules | None = None
+) -> str | None:
+    """The tensor-model mesh axis usable for a trailing dimension of size
+    `dim`, or None when it is absent or does not divide (the graceful
+    replicate-fallback contract shared by `HDCModel.shardings` and the
+    shard_map training path — one decision point, so the D-partitioning
+    of state, specs, and generator offsets can never disagree)."""
+    rules = rules or ShardingRules()
+    axis = rules.model_axis if rules.model_axis in mesh.axis_names else None
+    if axis and dim % mesh.shape[axis] == 0 and dim >= mesh.shape[axis]:
+        return axis
+    return None
+
+
 def constrain(x: jax.Array, spec: P) -> jax.Array:
     """with_sharding_constraint if a mesh is active; identity otherwise.
 

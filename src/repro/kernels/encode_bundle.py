@@ -19,6 +19,15 @@ the (H, D) threshold table from HBM entirely — the TPU mapping of the
 paper's "dynamic generation instead of stored tables" theme.  See
 ops.encode_bundle_dynamic, registered as the "pallas" backend of the
 "uhd_dynamic" encoder.
+
+The `fit_bundle*` kernels below fuse one more stage: per-class bundling
+(training).  Their grid is (D/dt, B/bt, H/ht) — the D axis outermost so
+each (C, dt) class-sum block stays resident in VMEM across the full
+(B, H) sweep, with *both* batch and feature axes folded into the
+accumulator.  The (B, D) hypervector batch therefore never exists in
+HBM, even tiled: the only HBM traffic of a training step is the
+quantized inputs, the label indicator, the encoder state (threshold
+tile or direction matrix) and the (C, D) class sums (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -153,3 +162,150 @@ def encode_bundle_dynamic_pallas(
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.int32),
         interpret=interpret,
     )(x_q.astype(jnp.int32), direction.astype(jnp.uint32))
+
+
+def _fit_bundle_kernel(x_ref, s_ref, oh_ref, o_ref, *, ht: int):
+    """x (bt, ht) i32, s (ht, dt) i32, oh (cp, bt) i32 -> acc o (cp, dt).
+
+    The (bt, dt) hypervector slab lives only in VREG/VMEM; it is
+    contracted against the label indicator in int32 (exact) before the
+    next grid step overwrites it.
+    """
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((i == 0) & (k == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ge = x_ref[...][:, :, None] >= s_ref[...][None, :, :]  # (bt, ht, dt)
+    hv = 2 * ge.sum(axis=1, dtype=jnp.int32) - ht  # (bt, dt)
+    oh = oh_ref[...]  # (cp, bt)
+    o_ref[...] += (oh[:, :, None] * hv[None, :, :]).sum(axis=1, dtype=jnp.int32)
+
+
+def fit_bundle_pallas(
+    x_q: jax.Array,
+    sobol_q: jax.Array,
+    onehot: jax.Array,
+    *,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused encode+bundle+class-sum over a threshold table.
+
+    x_q: (B, H) int32, sobol_q: (H, D) int32, onehot: (C, B) int32.
+    Requires B/H/D divisible by their blocks (ops.py pads + corrects);
+    C rides whole in one block.  Returns (C, D) int32 class sums.
+    """
+    b, h = x_q.shape
+    h2, d = sobol_q.shape
+    c = onehot.shape[0]
+    assert h == h2 and onehot.shape[1] == b
+    assert b % block_b == 0 and h % block_h == 0 and d % block_d == 0
+
+    grid = (d // block_d, b // block_b, h // block_h)
+    return pl.pallas_call(
+        functools.partial(_fit_bundle_kernel, ht=block_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_h), lambda j, i, k: (i, k)),
+            pl.BlockSpec((block_h, block_d), lambda j, i, k: (k, j)),
+            pl.BlockSpec((c, block_b), lambda j, i, k: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((c, block_d), lambda j, i, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((c, d), jnp.int32),
+        interpret=interpret,
+    )(x_q.astype(jnp.int32), sobol_q.astype(jnp.int32), onehot.astype(jnp.int32))
+
+
+def _fit_bundle_dyn_kernel(
+    x_ref, dir_ref, oh_ref, skip_ref, o_ref, *, ht: int, block_d: int, shift: int,
+    n_bits: int,
+):
+    """Table-free fit_bundle: thresholds generated in VMEM per D-tile.
+
+    `skip_ref` is a (1, 1) int32 *runtime* scalar (unlike the static
+    `skip` of the encode kernel): under D-axis sharding each shard
+    passes ``sobol_skip + axis_index * d_local``, which is traced — so
+    the first generated point index must be data, not a compile-time
+    constant.
+    """
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((i == 0) & (k == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = (j * block_d + jax.lax.iota(jnp.uint32, block_d)) + skip_ref[
+        0, 0
+    ].astype(jnp.uint32)
+    gray = idx ^ (idx >> jnp.uint32(1))
+    acc = jnp.zeros((dir_ref.shape[0], block_d), jnp.uint32)
+    dirs = dir_ref[...]
+    for bit in range(n_bits):
+        mask = ((gray >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.uint32)
+        acc = acc ^ (mask[None, :] * dirs[:, bit : bit + 1])
+    s = (acc >> jnp.uint32(shift)).astype(jnp.int32)
+
+    ge = x_ref[...][:, :, None] >= s[None, :, :]
+    hv = 2 * ge.sum(axis=1, dtype=jnp.int32) - ht
+    oh = oh_ref[...]
+    o_ref[...] += (oh[:, :, None] * hv[None, :, :]).sum(axis=1, dtype=jnp.int32)
+
+
+def fit_bundle_dynamic_pallas(
+    x_q: jax.Array,
+    direction: jax.Array,
+    onehot: jax.Array,
+    skip: jax.Array,
+    d: int,
+    *,
+    shift: int = 0,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused encode+bundle+class-sum with in-kernel Sobol generation.
+
+    x_q: (B, H) int32; direction: (H, n_bits) uint; onehot: (C, B) int32;
+    skip: (1, 1) int32 first-point index (may be traced — see the kernel
+    docstring).  Returns (C, d) int32 class sums; neither the (H, D)
+    threshold table nor the (B, D) hypervector batch ever touches HBM.
+    """
+    b, h = x_q.shape
+    h2, n_bits = direction.shape
+    c = onehot.shape[0]
+    assert h == h2 and onehot.shape[1] == b
+    assert b % block_b == 0 and h % block_h == 0 and d % block_d == 0
+
+    grid = (d // block_d, b // block_b, h // block_h)
+    return pl.pallas_call(
+        functools.partial(
+            _fit_bundle_dyn_kernel,
+            ht=block_h,
+            block_d=block_d,
+            shift=shift,
+            n_bits=n_bits,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_h), lambda j, i, k: (i, k)),
+            pl.BlockSpec((block_h, n_bits), lambda j, i, k: (k, 0)),
+            pl.BlockSpec((c, block_b), lambda j, i, k: (0, i)),
+            pl.BlockSpec((1, 1), lambda j, i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, block_d), lambda j, i, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((c, d), jnp.int32),
+        interpret=interpret,
+    )(
+        x_q.astype(jnp.int32),
+        direction.astype(jnp.uint32),
+        onehot.astype(jnp.int32),
+        jnp.asarray(skip, jnp.int32).reshape(1, 1),
+    )

@@ -26,6 +26,8 @@ from repro.kernels.bundle_binarize import bundle_binarize_pallas
 from repro.kernels.encode_bundle import (
     encode_bundle_dynamic_pallas,
     encode_bundle_pallas,
+    fit_bundle_dynamic_pallas,
+    fit_bundle_pallas,
 )
 from repro.kernels.encode_unary_mxu import encode_unary_mxu_pallas
 from repro.kernels.hamming_packed import hamming_packed_pallas, round_up as _round_up
@@ -123,6 +125,100 @@ def encode_bundle_dynamic(
     return out[:b, :d] + (hp - h)
 
 
+def _padded_class_onehot(labels: jax.Array, c_pad: int, b_pad: int) -> jax.Array:
+    """(B,) labels -> (c_pad, b_pad) int32 indicator via ref.class_onehot.
+
+    Padded batch columns carry label -1 and padded class rows match no
+    real label, so both drop out with zero weight — the same
+    out-of-range drop contract as the unpadded indicator.
+    """
+    lp = jnp.pad(
+        labels.astype(jnp.int32), (0, b_pad - labels.shape[0]), constant_values=-1
+    )
+    return ref.class_onehot(lp, c_pad)
+
+
+def fit_bundle(
+    x_q: jax.Array,
+    sobol_q: jax.Array,
+    labels: jax.Array,
+    n_classes: int,
+    *,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused training step over a threshold table. (B,H),(H,D),(B,) -> (C,D).
+
+    Semantics = `ref.fit_bundle` (integer-exact class sums; the (B, D)
+    hypervector batch never exists).  Padded features contribute exactly
+    -1 per dim to every *real* example, so the per-class correction is
+    (hp - h) * count_c; padded batch rows and padded classes carry zero
+    one-hot weight and drop out.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h = x_q.shape
+    d = sobol_q.shape[-1]
+    bp, hp, dp = _round_up(b, block_b), _round_up(h, block_h), _round_up(d, block_d)
+    cp = _round_up(max(n_classes, 8), 8)
+    xp = jnp.pad(x_q.astype(jnp.int32), ((0, bp - b), (0, hp - h)), constant_values=-1)
+    sp = jnp.pad(
+        sobol_q.astype(jnp.int32),
+        ((0, hp - h), (0, dp - d)),
+        constant_values=np.iinfo(np.int32).max,
+    )
+    oh = _padded_class_onehot(labels, cp, bp)
+    out = fit_bundle_pallas(
+        xp, sp, oh, block_b=block_b, block_h=block_h, block_d=block_d,
+        interpret=interpret,
+    )
+    counts = oh[:n_classes].sum(axis=1, dtype=jnp.int32)
+    return out[:n_classes, :d] + (hp - h) * counts[:, None]
+
+
+def fit_bundle_dynamic(
+    x_q: jax.Array,
+    direction: jax.Array,
+    labels: jax.Array,
+    n_classes: int,
+    d: int,
+    *,
+    levels: int | None = None,
+    skip: int | jax.Array = 1,
+    block_b: int = 8,
+    block_h: int = 112,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused table-free training step: in-kernel Sobol generation + encode
+    + per-class bundling.  Semantics = `ref.fit_bundle_dynamic`.
+
+    `skip` may be a traced scalar (D-sharded training passes
+    ``sobol_skip + axis_index * d_local``); it rides into the kernel as
+    a (1, 1) runtime operand, not a compile-time constant.  Padding
+    contracts are those of `encode_bundle_dynamic` (zero direction rows
+    for padded features) plus the per-class (hp - h) * count_c
+    correction of `fit_bundle`.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h = x_q.shape
+    shift = 0 if levels is None else 32 - (int(levels).bit_length() - 1)
+    bp, hp, dp = _round_up(b, block_b), _round_up(h, block_h), _round_up(d, block_d)
+    cp = _round_up(max(n_classes, 8), 8)
+    xp = jnp.pad(x_q.astype(jnp.int32), ((0, bp - b), (0, hp - h)), constant_values=-1)
+    dirp = jnp.pad(direction.astype(jnp.uint32), ((0, hp - h), (0, 0)))
+    oh = _padded_class_onehot(labels, cp, bp)
+    out = fit_bundle_dynamic_pallas(
+        xp, dirp, oh, skip, dp, shift=shift, block_b=block_b, block_h=block_h,
+        block_d=block_d, interpret=interpret,
+    )
+    counts = oh[:n_classes].sum(axis=1, dtype=jnp.int32)
+    return out[:n_classes, :d] + (hp - h) * counts[:, None]
+
+
 def encode_unary_mxu(
     x_q: jax.Array,
     sobol_q: jax.Array,
@@ -208,6 +304,8 @@ def hamming_packed(
 __all__ = [
     "encode_bundle",
     "encode_bundle_dynamic",
+    "fit_bundle",
+    "fit_bundle_dynamic",
     "encode_unary_mxu",
     "bundle_binarize",
     "hamming_packed",

@@ -7,6 +7,8 @@ kernels) against these.
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -56,6 +58,100 @@ def hamming_packed(q_words: jax.Array, c_words: jax.Array, d: int) -> jax.Array:
     x = q_words[:, None, :] ^ c_words[None, :, :]
     pc = jax.lax.population_count(x).astype(jnp.int32).sum(-1)
     return d - 2 * pc
+
+
+def class_onehot(labels: jax.Array, n_classes: int) -> jax.Array:
+    """(B,) int labels -> (C, B) int32 {0,1} indicator.
+
+    A label outside [0, n_classes) produces an all-zero column — the
+    jitted drop contract shared with `encoding.bundle_by_class` (the
+    host-path entry points validate labels loudly before tracing).
+    """
+    lab = labels.astype(jnp.int32)
+    return (lab[None, :] == jnp.arange(n_classes, dtype=jnp.int32)[:, None]).astype(
+        jnp.int32
+    )
+
+
+def fit_bundle(
+    x_q: jax.Array,
+    sobol_q: jax.Array,
+    labels: jax.Array,
+    n_classes: int,
+    *,
+    block_d: int = 512,
+) -> jax.Array:
+    """Fused training hot loop, table form: encode + per-class bundling in
+    one D-tile scan.  (B, H), (H, D), (B,) -> (C, D) int32 class sums.
+
+    Each scan step materializes only a (B, tile) hypervector slab and
+    immediately contracts it against the (C, B) label indicator in int32
+    — the (B, D) hypervector batch never exists at once, and the class
+    sums are integer-exact for any batch size.  Bit-identical to
+    `encode_bundle` followed by an int32 segment sum.
+    """
+    b, h = x_q.shape
+    d = sobol_q.shape[-1]
+    x = x_q.astype(jnp.int32)
+    onehot = class_onehot(labels, n_classes)
+    n_blocks = -(-d // block_d)
+    pad = n_blocks * block_d - d
+    s = jnp.pad(
+        sobol_q.astype(jnp.int32), ((0, 0), (0, pad)),
+        constant_values=np.iinfo(np.int32).max,
+    )
+    s = jnp.moveaxis(s.reshape(h, n_blocks, block_d), 1, 0)
+
+    def one(carry, sblk):
+        ge = x[:, :, None] >= sblk[None, :, :]  # (B, H, tile)
+        hv = 2 * ge.sum(axis=1, dtype=jnp.int32) - h
+        return carry, jnp.einsum(
+            "cb,bd->cd", onehot, hv, preferred_element_type=jnp.int32
+        )
+
+    _, out = jax.lax.scan(one, 0, s)
+    return jnp.moveaxis(out, 0, 1).reshape(n_classes, -1)[:, :d]
+
+
+def fit_bundle_dynamic(
+    x_q: jax.Array,
+    direction: jax.Array,
+    labels: jax.Array,
+    n_classes: int,
+    d: int,
+    *,
+    skip: int | jax.Array = 1,
+    block_d: int = 512,
+) -> jax.Array:
+    """Table-free fused training hot loop: Sobol thresholds regenerated
+    per D-tile, encoded, and bundled into (C, d) int32 class sums — the
+    only training-time state is the (H, N_BITS) direction matrix.
+
+    `skip` is the index of the first Sobol point generated and may be a
+    *traced* scalar: under D-axis sharding each host passes
+    ``cfg.sobol_skip + axis_index * d_local`` so it Gray-codes only the
+    points of its own D-slice.  Bit-identical to `fit_bundle` over the
+    table built with the same seed/levels/skip.
+    """
+    b, h = x_q.shape
+    x = x_q[:, :, None].astype(jnp.int32)
+    dirs = direction.astype(jnp.uint32)
+    onehot = class_onehot(labels, n_classes)
+    n_blocks = -(-d // block_d)
+    starts = jnp.asarray(skip, jnp.uint32) + jnp.arange(
+        n_blocks, dtype=jnp.uint32
+    ) * jnp.uint32(block_d)
+
+    def one(carry, d0):
+        s = sobol_tile(dirs, d0, block_d).astype(jnp.int32)
+        ge = x >= s[None, :, :]
+        hv = 2 * ge.sum(axis=1, dtype=jnp.int32) - h
+        return carry, jnp.einsum(
+            "cb,bd->cd", onehot, hv, preferred_element_type=jnp.int32
+        )
+
+    _, out = jax.lax.scan(one, 0, starts)
+    return jnp.moveaxis(out, 0, 1).reshape(n_classes, -1)[:, :d]
 
 
 def sobol_tile(direction: jax.Array, d0: jax.Array, tile: int) -> jax.Array:

@@ -104,7 +104,7 @@ def run_smoke(args) -> int:
     swapped = registry.hot_reload(name, step=1)  # pinned: dir may be reused
     assert swapped == 1, f"expected hot reload to step 1, got {swapped}"
     print(f"hot-reloaded to step {swapped} "
-          f"(n_seen {int(registry.engine(name).model.n_seen)}) "
+          f"(n_seen {registry.engine(name).model.n_examples}) "
           f"with {batcher.queue_depth()} requests queued")
 
     # -- serve the rest of the stream on the new engine ------------------

@@ -41,8 +41,21 @@ def main(argv=None) -> int:
              "chosen encoder (a bad name errors listing the options)",
     )
     ap.add_argument("--batch-size", type=int, default=2048)
+    ap.add_argument(
+        "--shard-map", action="store_true",
+        help="train via the explicit shard_map path (batch-axis psum + "
+             "per-D-slice generation) instead of GSPMD inference; "
+             "bit-identical results (DESIGN.md §9)",
+    )
     ap.add_argument("--save-dir", default=None,
                     help="checkpoint the trained HDCModel here")
+    ap.add_argument(
+        "--ckpt-shards", type=int, default=0,
+        help="with --save-dir: also write the checkpoint as N per-host "
+             "D-shards through CheckpointManager.save_shard (simulated "
+             "hosts in this single process) and verify the stitched "
+             "restore",
+    )
     ap.add_argument("--compare-baseline", action="store_true")
     ap.add_argument("--baseline-iters", type=int, default=5)
     args = ap.parse_args(argv)
@@ -65,18 +78,39 @@ def main(argv=None) -> int:
                    ds.train_labels[i : i + args.batch_size])
 
     t0 = time.time()
-    model = HDCModel.create(cfg).fit_batches(batches())
+    if args.shard_map:
+        from repro.core import partial_fit_sharded
+
+        model = HDCModel.create(cfg).shard(mesh)
+        for images, labels in batches():
+            model = partial_fit_sharded(model, images, labels, mesh=mesh)
+        mode = "shard_map"
+    else:
+        model = HDCModel.create(cfg).fit_batches(batches())
+        mode = "gspmd"
     acc = model.evaluate(ds.test_images, ds.test_labels)
-    print(f"{args.encoder}  D={args.d} backend={args.backend}: accuracy {acc:.4f}  "
-          f"({int(model.n_seen)} images, single pass, {time.time()-t0:.1f}s)")
+    print(f"{args.encoder}  D={args.d} backend={args.backend} [{mode}]: "
+          f"accuracy {acc:.4f}  "
+          f"({model.n_examples} images, single pass, {time.time()-t0:.1f}s)")
 
     if args.save_dir:
-        model.save(args.save_dir, step=0)
+        if args.ckpt_shards > 1:
+            from repro.checkpoint.manager import CheckpointManager
+
+            for pi in range(args.ckpt_shards):
+                model.save_shard(
+                    args.save_dir, step=0,
+                    process_index=pi, process_count=args.ckpt_shards,
+                )
+            CheckpointManager(args.save_dir).finalize_shards(0)
+        else:
+            model.save(args.save_dir, step=0)
         restored = HDCModel.load(args.save_dir)
         ok = restored.cfg == model.cfg and bool(
             (restored.class_sums == model.class_sums).all()
         )
-        print(f"checkpointed to {args.save_dir} (round-trip ok: {ok})")
+        shard_note = f", {args.ckpt_shards} host shards" if args.ckpt_shards > 1 else ""
+        print(f"checkpointed to {args.save_dir} (round-trip ok: {ok}{shard_note})")
 
     if args.compare_baseline:
         t0 = time.time()

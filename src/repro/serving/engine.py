@@ -126,7 +126,7 @@ class ServingEngine:
             "batch_size": self.batch_size,
             "step": self.step,
             "source": str(self.source) if self.source else None,
-            "n_seen": int(self.model.n_seen),
+            "n_seen": self.model.n_examples,
             "packed_bytes": int(self.class_words.size * 4),
             # resident encoder state: the whole point of uhd_dynamic is
             # that this is O(H*32) instead of the O(H*D) table

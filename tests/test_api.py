@@ -189,7 +189,7 @@ def test_register_new_encoder_is_additive():
         x, y = _data(cfg)
         acc_model = model.fit(x, y)
         assert acc_model.class_sums.shape == (cfg.n_classes, cfg.d)
-        assert int(acc_model.n_seen) == len(x)
+        assert acc_model.n_examples == len(x)
     finally:
         del registry._ENCODERS["_toy"]
         del registry._BACKENDS["_toy"]
@@ -231,7 +231,7 @@ def test_partial_fit_equals_fit_on_concatenation():
     np.testing.assert_array_equal(
         np.asarray(stream.class_sums), np.asarray(whole.class_sums)
     )
-    assert int(stream.n_seen) == int(whole.n_seen) == 30
+    assert stream.n_examples == whole.n_examples == 30
     np.testing.assert_array_equal(
         np.asarray(stream.predict(x)), np.asarray(whole.predict(x))
     )
@@ -257,7 +257,7 @@ def test_save_load_roundtrip_identical_predictions(tmp_path, encoder):
     model.save(tmp_path / "ckpt", step=3)
     restored = HDCModel.load(tmp_path / "ckpt")
     assert restored.cfg == cfg
-    assert int(restored.n_seen) == 20
+    assert restored.n_examples == 20
     np.testing.assert_array_equal(
         np.asarray(restored.predict(x)), np.asarray(model.predict(x))
     )
@@ -307,7 +307,7 @@ def test_table_checkpoint_load_as_dynamic_fails_loudly(tmp_path):
     like = {
         "codebooks": get_encoder("uhd_dynamic").codebook_specs(dyn_cfg),
         "class_sums": jax.ShapeDtypeStruct((cfg.n_classes, cfg.d), jnp.int32),
-        "n_seen": jax.ShapeDtypeStruct((), jnp.int32),
+        "n_seen": jax.ShapeDtypeStruct((2,), jnp.uint32),
     }
     with pytest.raises(KeyError, match="missing leaf"):
         CheckpointManager(tmp_path / "ckpt").restore(0, like)
@@ -346,7 +346,7 @@ def test_reset_drops_state_keeps_codebooks():
     x, y = _data(cfg)
     model = HDCModel.create(cfg).fit(x, y)
     fresh = model.reset()
-    assert int(fresh.n_seen) == 0
+    assert fresh.n_examples == 0
     assert not np.asarray(fresh.class_sums).any()
     assert fresh.codebooks["sobol"] is model.codebooks["sobol"]
 

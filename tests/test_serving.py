@@ -387,7 +387,7 @@ def test_hot_reload_swaps_without_dropping_requests(tmp_path):
     m1.save(tmp_path / "ckpt", step=1)
     assert reg.hot_reload("uhd") == 1
     assert reg.engine("uhd").step == 1
-    assert int(reg.engine("uhd").model.n_seen) == 64
+    assert reg.engine("uhd").model.n_examples == 64
     assert batcher.queue_depth() == 6  # nothing dropped
 
     batcher.flush()
@@ -397,7 +397,7 @@ def test_hot_reload_swaps_without_dropping_requests(tmp_path):
 
     # explicit step pins an exact version (rollback)
     assert reg.hot_reload("uhd", step=0) == 0
-    assert int(reg.engine("uhd").model.n_seen) == 32
+    assert reg.engine("uhd").model.n_examples == 32
 
 
 def test_hot_reload_table_checkpoint_to_dynamic_checkpoint(tmp_path):
