@@ -1,0 +1,210 @@
+"""Online-learning benchmark: ingest rate, promote latency, serving tax.
+
+Three questions about the closed loop (DESIGN.md §10), answered against
+a live `HdcHttpServer` + `OnlineLearner` + `ReloadWatcher` stack on a
+real socket:
+
+  1. **feedback ingest rate** — labeled examples/s accepted over the
+     raw-binary `:feedback` hot path while the learner is draining;
+  2. **publish-to-promote latency** — wall time from the learner's
+     checkpoint publish to the watcher swapping it into the serving
+     path (the staleness floor of the whole loop);
+  3. **predict tax** — closed-loop predict p50/p99 with the learner
+     *idle* vs *active* (ingesting + training + publishing), i.e. what
+     online learning costs the serving path.
+
+Emits the `BENCH_online` artifact (artifacts/bench/BENCH_online.json),
+uploaded by CI alongside BENCH_{serve,encode_dynamic,transport,train}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import save_artifact, table
+from repro.core import HDCConfig, HDCModel
+from repro.data import load_dataset
+from repro.online import OnlineLearner
+from repro.serving import ModelRegistry
+from repro.transport import HdcClient, HdcHttpServer, OverloadedError, ReloadWatcher
+
+
+def _predict_phase(host, port, name, images, *, n: int, workers: int) -> np.ndarray:
+    """Closed-loop single-image predicts; returns latencies (seconds)."""
+    latencies: list[float] = []
+    lock = threading.Lock()
+    counter = iter(range(n))
+
+    def worker():
+        with HdcClient(host, port, timeout_s=60.0) as client:
+            while True:
+                with lock:
+                    i = next(counter, None)
+                if i is None:
+                    return
+                img = images[i % len(images)][None]
+                t0 = time.perf_counter()
+                client.predict_batch(name, img)
+                dt = time.perf_counter() - t0
+                with lock:
+                    latencies.append(dt)
+
+    threads = [threading.Thread(target=worker) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return np.asarray(latencies, np.float64)
+
+
+def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
+    d = d or (1024 if fast else 4096)
+    n_train = 512 if fast else 2048
+    n_feedback = 2048 if fast else 8192
+    n_predict = 192 if fast else 512
+    chunk = 128
+    workers = 4
+
+    ds = load_dataset("synth_mnist", n_train=n_train + n_feedback, n_test=256)
+    cfg = HDCConfig(
+        n_features=ds.n_features, n_classes=ds.n_classes, d=d, levels=16,
+        encoder=encoder,
+    )
+    name = encoder
+    ckpt_dir = tempfile.mkdtemp(prefix="hdc_online_bench_")
+    model = HDCModel.create(cfg).fit(
+        ds.train_images[:n_train], ds.train_labels[:n_train]
+    )
+    model.save(ckpt_dir, step=0)
+    feed_x = np.asarray(ds.train_images[n_train:], np.float32)
+    feed_y = np.asarray(ds.train_labels[n_train:], np.int32)
+
+    publish_t: dict[int, float] = {}
+    promote_t: dict[int, float] = {}
+    registry = ModelRegistry()
+    registry.register_checkpoint(
+        name, ckpt_dir, step=0, batch_size=32, max_depth=4096, start=True
+    )
+    learner = OnlineLearner(
+        registry, name, train_batch=256, publish_every_s=0.25,
+        poll_interval_s=0.01, keep_n=3,
+        on_publish=lambda n, s: publish_t.setdefault(s, time.perf_counter()),
+    ).start()
+    watcher = ReloadWatcher(
+        registry, name, interval_s=0.05,
+        on_promote=lambda n, s: promote_t.setdefault(s, time.perf_counter()),
+    ).start()
+    server = HdcHttpServer(registry).start()
+    host, port = server.address
+
+    try:
+        # -- phase 1: predict latency with the learner idle ---------------
+        lat_idle = _predict_phase(
+            host, port, name, ds.test_images, n=n_predict, workers=workers
+        )
+
+        # -- phase 2: feedback ingest + predict latency, learner active ---
+        n_sent = 0
+        n_shed = 0
+        ingest_wall = 0.0
+        done = threading.Event()
+
+        def stream_feedback():
+            nonlocal n_sent, n_shed, ingest_wall
+            t0 = time.perf_counter()
+            with HdcClient(host, port, timeout_s=60.0) as client:
+                i = 0
+                while not done.is_set() or i < len(feed_x):
+                    if i >= len(feed_x):
+                        break
+                    block_x = feed_x[i : i + chunk]
+                    block_y = feed_y[i : i + chunk]
+                    try:
+                        client.feedback(name, block_x, block_y)
+                        n_sent += len(block_x)
+                    except OverloadedError:
+                        n_shed += len(block_x)
+                    i += chunk
+            ingest_wall = time.perf_counter() - t0
+
+        streamer = threading.Thread(target=stream_feedback)
+        streamer.start()
+        lat_active = _predict_phase(
+            host, port, name, ds.test_images, n=n_predict, workers=workers
+        )
+        done.set()
+        streamer.join()
+
+        # -- phase 3: let the loop settle, measure publish->promote -------
+        deadline = time.time() + 60.0
+        while (
+            learner.snapshot()["lag_examples"] > 0
+            or registry.engine(name).step != learner.step
+        ):
+            if time.time() > deadline:
+                break
+            time.sleep(0.05)
+        snap = learner.snapshot()
+        promote_lat = [
+            promote_t[s] - publish_t[s] for s in promote_t if s in publish_t
+        ]
+    finally:
+        server.stop()
+        registry.shutdown()
+        assert not learner.running() and not watcher.running()
+
+    ingest_eps = n_sent / ingest_wall if ingest_wall else float("nan")
+    p2p_ms = (
+        float(np.median(promote_lat) * 1e3) if promote_lat else float("nan")
+    )
+    out = {
+        "device": jax.default_backend(),
+        "d": d,
+        "encoder": encoder,
+        "n_train": n_train,
+        "n_feedback_sent": int(n_sent),
+        "n_feedback_shed": int(n_shed),
+        "ingest_eps": float(ingest_eps),
+        "publish_to_promote_ms": p2p_ms,
+        "n_published": int(snap["n_published"]),
+        "n_promoted": len(promote_t),
+        "n_trained": int(snap["n_trained"]),
+        "predict_p50_ms_idle": float(np.percentile(lat_idle, 50) * 1e3),
+        "predict_p99_ms_idle": float(np.percentile(lat_idle, 99) * 1e3),
+        "predict_p50_ms_active": float(np.percentile(lat_active, 50) * 1e3),
+        "predict_p99_ms_active": float(np.percentile(lat_active, 99) * 1e3),
+    }
+    table(
+        f"online loop (d={d}, {encoder})",
+        ["ingest ex/s", "pub->promote ms", "p99 idle ms", "p99 active ms",
+         "published/promoted"],
+        [[f"{ingest_eps:.0f}", f"{p2p_ms:.1f}",
+          f"{out['predict_p99_ms_idle']:.2f}",
+          f"{out['predict_p99_ms_active']:.2f}",
+          f"{out['n_published']}/{out['n_promoted']}"]],
+    )
+    save_artifact("BENCH_online", out)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    ap.add_argument("--d", type=int, default=None)
+    ap.add_argument("--encoder", default="uhd",
+                    help="served encoder (uhd | uhd_dynamic)")
+    args = ap.parse_args()
+    run(fast=args.fast, d=args.d, encoder=args.encoder)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,10 @@ and `HDCModel` (codebooks + class-hypervector state as one pytree, with
 `fit` / `partial_fit` / `predict` / `evaluate` / `save` / `load`).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Next steps: `examples/serve_http.py` puts a trained model behind HTTP;
+`examples/online_learning.py` keeps it learning from labeled feedback
+traffic after deployment (DESIGN.md §10).
 """
 
 import sys

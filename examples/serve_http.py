@@ -5,6 +5,9 @@ client -> publish a converted table-free checkpoint and watch the
 background watcher promote it without a restart.
 
     PYTHONPATH=src python examples/serve_http.py
+
+To keep learning from labeled traffic after deployment (the DESIGN.md
+§10 feedback loop), see `examples/online_learning.py`.
 """
 
 import sys

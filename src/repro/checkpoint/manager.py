@@ -16,7 +16,12 @@ Design points for the 1000-node posture:
   * elasticity: restore() takes an optional pytree of NamedShardings —
     arrays are device_put to the *new* mesh, so a job restarted on a
     different device count resumes from the same file set;
-  * retention: keep_n newest checkpoints are retained, older ones GC'd;
+  * retention: keep_n newest checkpoints are retained, older ones GC'd
+    on every publish — including stale `.tmp` staging debris from torn
+    attempts once it falls behind the retention window (never the
+    latest finalized set, never a live staging dir) — so a periodic
+    publisher (e.g. the online learner) runs indefinitely in bounded
+    disk; keep_n=0 disables pruning entirely;
   * preemption: install_sigterm_handler() hooks SIGTERM to flush a final
     checkpoint before exit (the standard TPU-preemption contract).
 
@@ -238,9 +243,30 @@ class CheckpointManager:
             raise err
 
     def _gc(self):
+        """Prune-on-publish retention: keep the `keep_n` newest finalized
+        sets (the latest is always among them, so a reader never loses
+        its floor), and collect stale `.tmp` staging dirs left by torn
+        or aborted attempts once their step falls behind the retention
+        window.  Torn-shard-safe: any *live* staging attempt is at a
+        step >= the latest finalized one (steps publish monotonically),
+        so a `.tmp` strictly older than the oldest kept step can never
+        be an in-flight save — only debris that `finalize_shards` would
+        refuse anyway.  `keep_n=0` keeps everything and prunes nothing;
+        the online learner's periodic publishing relies on this GC to
+        run indefinitely in bounded disk.
+        """
+        if not self.keep_n:
+            return
         steps = sorted(self.all_steps())
-        for s in steps[: -self.keep_n] if self.keep_n else []:
+        for s in steps[: -self.keep_n]:
             shutil.rmtree(self.root / f"step_{s:09d}", ignore_errors=True)
+        kept = steps[-self.keep_n :]
+        if not kept:
+            return
+        for p in self.root.iterdir():
+            m = re.fullmatch(r"step_(\d+)\.tmp", p.name)
+            if m and int(m.group(1)) < kept[0]:
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- read ------------------------------------------------------------
 

@@ -1,0 +1,26 @@
+"""repro.online — online learning from serving traffic (DESIGN.md §10).
+
+Closes the loop the rest of the stack left open: labeled feedback
+POSTed to the serving front-end (`POST /v1/models/{name}:feedback`)
+lands in a bounded `FeedbackBuffer`; an `OnlineLearner` daemon thread
+drains it through the donated-state fused ``fit_bundle`` training hot
+loop and periodically publishes checkpoints; the existing
+`ReloadWatcher` promotes them into the serving path with traffic in
+flight.  HDC's additive class-sum updates make the learner's state
+bit-identical to offline ``partial_fit`` on the same stream — dynamic
+HDC (the paper's headline claim) taken to production.
+
+    registry = ModelRegistry()
+    registry.register_checkpoint("uhd", "ckpt/", start=True)
+    OnlineLearner(registry, "uhd", publish_every_s=2.0).start()
+    ReloadWatcher(registry, "uhd", interval_s=2.0).start()
+    server = HdcHttpServer(registry, port=8000).start()
+    ...
+    server.stop()
+    registry.shutdown()   # learners -> watchers -> batcher drain -> engines
+
+CLI driver: ``python -m repro.launch.serve_online --smoke``.
+"""
+
+from repro.online.buffer import FeedbackBuffer  # noqa: F401
+from repro.online.learner import OnlineLearner  # noqa: F401

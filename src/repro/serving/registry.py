@@ -40,6 +40,7 @@ class ModelRegistry:
         self._lock = threading.RLock()
         self._entries: dict[str, MicroBatcher] = {}
         self._watchers: dict[str, object] = {}  # name -> ReloadWatcher-like
+        self._learners: dict[str, object] = {}  # name -> OnlineLearner-like
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -102,22 +103,51 @@ class ModelRegistry:
         with self._lock:
             return self._watchers.get(name)
 
+    def attach_learner(self, name: str, learner) -> None:
+        """Tie an online learner (anything with ``stop()``) to an entry.
+        Learners stop *before* watchers on teardown: no new checkpoint
+        can be published once shutdown begins, so no promotion of a
+        mid-shutdown artifact can race the batcher drain.  One learner
+        per entry; `OnlineLearner.start` calls this."""
+        with self._lock:
+            if name not in self._entries:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {sorted(self._entries)}"
+                )
+            if name in self._learners:
+                raise ValueError(f"model {name!r} already has a learner")
+            self._learners[name] = learner
+
+    def learner(self, name: str):
+        with self._lock:
+            return self._learners.get(name)
+
     def unregister(self, name: str, *, drain: bool = True) -> None:
-        """Tear one entry down in deterministic order: its watcher first
-        (no promotion can race the drain), then the batcher (serving the
-        queued remainder when `drain`), then the engine reference is
-        dropped with the entry."""
+        """Tear one entry down in deterministic order: its learner first
+        (no new checkpoint appears), then its watcher (no promotion can
+        race the drain), then the batcher (serving the queued remainder
+        when `drain`), then the engine reference is dropped with the
+        entry."""
         with self._lock:
             batcher = self._entries.pop(name)
             watcher = self._watchers.pop(name, None)
+            learner = self._learners.pop(name, None)
+        if learner is not None:
+            learner.stop(drain=drain)
         if watcher is not None:
             watcher.stop()
         batcher.stop(drain=drain)
 
     def shutdown(self, *, drain: bool = True) -> None:
-        """Stop everything, idempotently, in name order: all watchers,
-        then each batcher (drained), engines released with the entries.
-        Safe to call twice or concurrently with `unregister`."""
+        """Stop everything, idempotently, in name order: all learners,
+        then all watchers, then each batcher (drained), engines released
+        with the entries.  Safe to call twice or concurrently with
+        `unregister`."""
+        with self._lock:
+            learners = sorted(self._learners.items())
+            self._learners = {}
+        for _, learner in learners:
+            learner.stop(drain=drain)
         with self._lock:
             watchers = sorted(self._watchers.items())
             self._watchers = {}

@@ -153,3 +153,33 @@ class HdcClient:
             {"Content-Type": protocol.CT_JSON},
         )
         return np.asarray(out["labels"], np.int32)
+
+    # -- feedback (online learning, DESIGN.md §10) -------------------------
+
+    def feedback(self, name: str, images, labels, *, binary: bool = True) -> dict:
+        """POST labeled examples for the model's online learner.
+
+        Returns the ack dict (``{"accepted": n, "buffered": depth}``).
+        Raises `OverloadedError` (429) when the feedback buffer sheds
+        the block — the block was *not* ingested and is safe to re-send
+        later.  Note the shared stale-socket retry: a reconnect across
+        an ambiguous failure (response lost after the server read the
+        request) can deliver a block twice — acceptable for additive
+        HDC feedback, but a stronger exactly-once story needs
+        client-side dedup keys.
+        """
+        if binary:
+            out = self._json(
+                "POST", protocol.feedback_path(name),
+                protocol.encode_feedback(images, labels),
+                {"Content-Type": protocol.CT_F32},
+            )
+            return out
+        body = json.dumps({
+            "images": np.asarray(images, np.float32).tolist(),
+            "labels": np.asarray(labels, np.int64).tolist(),
+        }).encode()
+        return self._json(
+            "POST", protocol.feedback_path(name), body,
+            {"Content-Type": protocol.CT_JSON},
+        )

@@ -14,6 +14,11 @@ Two planes, both over plain HTTP/1.1:
     million-user front-end at one memcpy each way — no base64, no JSON
     float parsing on a 784-float image.
 
+The feedback plane (``:feedback``, DESIGN.md §10) mirrors the predict
+plane: a JSON form for debugging and a raw form (f32 image rows
+followed by i32 labels, ``4H + 4`` bytes per example) for the
+online-learning hot path.
+
 Everything here is shared by `server` and `client` so the two ends can
 never skew; the codec functions are pure and unit-tested in
 ``tests/test_transport.py``.
@@ -33,6 +38,7 @@ ROUTE_HEALTH = "/healthz"
 ROUTE_MODELS = "/v1/models"
 ROUTE_METRICS = "/metrics"
 PREDICT_SUFFIX = ":predict"
+FEEDBACK_SUFFIX = ":feedback"
 
 _F32 = np.dtype("<f4")
 _I32 = np.dtype("<i4")
@@ -40,6 +46,10 @@ _I32 = np.dtype("<i4")
 
 def predict_path(name: str) -> str:
     return f"{ROUTE_MODELS}/{name}{PREDICT_SUFFIX}"
+
+
+def feedback_path(name: str) -> str:
+    return f"{ROUTE_MODELS}/{name}{FEEDBACK_SUFFIX}"
 
 
 def encode_images(images) -> bytes:
@@ -73,6 +83,80 @@ def decode_labels(body: bytes) -> np.ndarray:
     if len(body) % _I32.itemsize != 0:
         raise ValueError(f"label payload of {len(body)} bytes is not int32-aligned")
     return np.frombuffer(body, _I32).astype(np.int32, copy=False)
+
+
+def encode_feedback(images, labels) -> bytes:
+    """Labeled block -> raw bytes: (n, H) LE float32 rows then (n,) LE
+    int32 labels, back to back.  No framing — ``n`` is recovered from
+    the body length (each example costs exactly ``4H + 4`` bytes), so
+    the online-learning hot path stays one memcpy each way, like the
+    predict plane."""
+    arr = np.ascontiguousarray(np.asarray(images, _F32))
+    if arr.ndim == 1:
+        arr = arr[None]
+    if arr.ndim != 2:
+        raise ValueError(f"images must be (n, H) or (H,), got {arr.shape}")
+    lab = np.ascontiguousarray(np.asarray(labels, _I32).ravel())
+    if lab.shape != (len(arr),):
+        raise ValueError(
+            f"labels must be ({len(arr)},) to match images, got {lab.shape}"
+        )
+    return arr.tobytes() + lab.tobytes()
+
+
+def decode_feedback(body: bytes, n_features: int) -> tuple[np.ndarray, np.ndarray]:
+    """Raw feedback bytes -> ((n, H) float32, (n,) int32); loud on any
+    length mismatch (the record size ``4H + 4`` must divide exactly)."""
+    rec_bytes = n_features * _F32.itemsize + _I32.itemsize
+    if len(body) == 0 or len(body) % rec_bytes != 0:
+        raise ValueError(
+            f"binary feedback payload of {len(body)} bytes is not a positive "
+            f"multiple of {rec_bytes} (= {n_features} float32 features "
+            "+ 1 int32 label per example)"
+        )
+    n = len(body) // rec_bytes
+    split = n * n_features * _F32.itemsize
+    images = np.frombuffer(body[:split], _F32).reshape(n, n_features)
+    labels = np.frombuffer(body[split:], _I32)
+    return (
+        images.astype(np.float32, copy=False),
+        labels.astype(np.int32, copy=False),
+    )
+
+
+def parse_feedback_json(obj) -> tuple[np.ndarray, np.ndarray]:
+    """JSON feedback body -> ((n, H) float32, (n,) int32).
+
+    ``{"image": [...], "label": 3}`` is the single form; ``{"images":
+    [[...], ...], "labels": [...]}`` the batch form.  Labels must be
+    integral — 400, not silent truncation, on ``2.5``.
+    """
+    if not isinstance(obj, dict) or ("image" in obj) == ("images" in obj):
+        raise ValueError(
+            'feedback body must be {"image": [...], "label": k} or '
+            '{"images": [[...], ...], "labels": [...]}'
+        )
+    single = "image" in obj
+    if single != ("label" in obj) or (not single) != ("labels" in obj):
+        raise ValueError('pair "image" with "label" and "images" with "labels"')
+    images = np.asarray(obj["image"] if single else obj["images"], np.float32)
+    if single:
+        if images.ndim != 1:
+            raise ValueError(f'"image" must be a flat (H,) list, got {images.shape}')
+        images = images[None]
+    elif images.ndim != 2 or images.shape[0] == 0:
+        raise ValueError(
+            f'"images" must be a non-empty (n, H) list of lists, got {images.shape}'
+        )
+    raw = np.asarray([obj["label"]] if single else obj["labels"])
+    if raw.dtype.kind == "f" and not np.equal(raw, np.floor(raw)).all():
+        raise ValueError("labels must be integers")
+    if raw.dtype.kind not in "iuf" or raw.shape != (len(images),):
+        raise ValueError(
+            f"labels must be ({len(images)},) integers, got "
+            f"{raw.dtype}{raw.shape}"
+        )
+    return images, raw.astype(np.int32)
 
 
 def parse_predict_json(obj) -> tuple[np.ndarray, bool]:

@@ -8,11 +8,17 @@ posts the drain thread's resolution back onto the loop with
 `call_soon_threadsafe`, so 10k in-flight requests cost 10k small
 futures, not 10k blocked threads.
 
-Routes (DESIGN.md §8):
+Routes (DESIGN.md §8, §10):
 
   * ``POST /v1/models/{name}:predict`` — single or batch.  JSON control
     form or the raw little-endian ``application/x-hdc-f32`` hot path;
     ``Accept: application/x-hdc-i32`` selects raw int32 labels back.
+  * ``POST /v1/models/{name}:feedback`` — labeled examples for the
+    model's `OnlineLearner`.  Labels are validated at the boundary
+    (`encoding.validate_labels`; out-of-range or shape mismatch -> 400)
+    and enqueued into the learner's bounded `FeedbackBuffer` — a full
+    buffer sheds the whole block with a 429, *never* blocking the
+    predict path on training.
   * ``GET /healthz`` — liveness + per-model step/queue-depth/watcher.
   * ``GET /v1/models`` — `ServingEngine.describe()` per model
     (including ``codebook_bytes``, the uHD deployment headline).
@@ -39,6 +45,7 @@ from dataclasses import dataclass, field
 from http import HTTPStatus
 from urllib.parse import unquote, urlsplit
 
+from repro.core import encoding
 from repro.serving.batcher import QueueFull
 from repro.serving.registry import ModelRegistry
 from repro.transport import protocol
@@ -286,6 +293,15 @@ class HdcHttpServer:
                     HTTPStatus.METHOD_NOT_ALLOWED, "predict is POST-only"
                 )
             return await self._predict(name, request)
+        if path.startswith(protocol.ROUTE_MODELS + "/") and path.endswith(
+            protocol.FEEDBACK_SUFFIX
+        ):
+            name = path[len(protocol.ROUTE_MODELS) + 1 : -len(protocol.FEEDBACK_SUFFIX)]
+            if method != "POST":
+                return _Response.error(
+                    HTTPStatus.METHOD_NOT_ALLOWED, "feedback is POST-only"
+                )
+            return self._feedback(name, request)
         return _Response.error(HTTPStatus.NOT_FOUND, f"no route {method} {path}")
 
     def _models(self) -> _Response:
@@ -306,10 +322,12 @@ class HdcHttpServer:
             except KeyError:  # racing an unregister
                 continue
             watcher = self.registry.watcher(name)
+            learner = self.registry.learner(name)
             models[name] = {
                 "step": engine.step,
                 "queue_depth": batcher.queue_depth(),
                 "watcher": None if watcher is None else watcher.describe(),
+                "learner": None if learner is None else learner.describe(),
             }
         return _Response.json(HTTPStatus.OK, {"status": "ok", "models": models})
 
@@ -317,9 +335,13 @@ class HdcHttpServer:
         out = {}
         for name in self.registry.names():
             try:
-                out[name] = self.registry.batcher(name).metrics.snapshot()
+                snap = self.registry.batcher(name).metrics.snapshot()
             except KeyError:
                 continue
+            learner = self.registry.learner(name)
+            if learner is not None:
+                snap["online"] = learner.snapshot()
+            out[name] = snap
         return _Response.json(HTTPStatus.OK, out)
 
     # -- predict -----------------------------------------------------------
@@ -356,7 +378,10 @@ class HdcHttpServer:
                     f"model {name!r} takes {n_features} features per image, "
                     f"got {images.shape[1]}"
                 )
-        except (ValueError, json.JSONDecodeError) as e:
+        # TypeError too: a JSON body with non-numeric entries (e.g. null)
+        # raises it from np.asarray — that is a malformed payload (400),
+        # not a server bug (500)
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
             return _Response.error(HTTPStatus.BAD_REQUEST, str(e))
 
         # -- admission: bounded queue depth -> shed loudly ----------------
@@ -406,6 +431,73 @@ class HdcHttpServer:
         if single:
             return _Response.json(HTTPStatus.OK, {"label": int(labels[0])})
         return _Response.json(HTTPStatus.OK, {"labels": [int(l) for l in labels]})
+
+    # -- feedback (online learning ingest, DESIGN.md §10) ------------------
+
+    def _feedback(self, name: str, request: _Request) -> _Response:
+        """Validate a labeled block at the boundary and enqueue it for
+        the model's learner.  Synchronous and non-blocking: the buffer
+        put is a bounded lock-append, so feedback ingestion can never
+        stall the predict path behind training."""
+        try:
+            batcher = self.registry.batcher(name)
+        except KeyError:
+            return _Response.error(
+                HTTPStatus.NOT_FOUND,
+                f"unknown model {name!r}",
+                registered=list(self.registry.names()),
+            )
+        learner = self.registry.learner(name)
+        if learner is None:
+            return _Response.error(
+                HTTPStatus.NOT_FOUND,
+                f"model {name!r} has no online learner attached; "
+                "feedback is not accepted",
+            )
+        cfg = batcher.engine.model.cfg
+        content_type = request.header("content-type", protocol.CT_JSON)
+        content_type = content_type.split(";")[0].strip().lower()
+        try:
+            if content_type == protocol.CT_F32:
+                images, labels = protocol.decode_feedback(
+                    request.body, cfg.n_features
+                )
+            elif content_type == protocol.CT_JSON:
+                images, labels = protocol.parse_feedback_json(
+                    json.loads(request.body or b"{}")
+                )
+            else:
+                return _Response.error(
+                    HTTPStatus.UNSUPPORTED_MEDIA_TYPE,
+                    f"unsupported content type {content_type!r}; "
+                    f"use {protocol.CT_JSON} or {protocol.CT_F32}",
+                )
+            if images.shape[1] != cfg.n_features:
+                raise ValueError(
+                    f"model {name!r} takes {cfg.n_features} features per "
+                    f"image, got {images.shape[1]}"
+                )
+            # the same host-boundary contract as HDCModel.partial_fit:
+            # out-of-range labels answer 400 here, never reach training
+            encoding.validate_labels(labels, cfg.n_classes)
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            return _Response.error(HTTPStatus.BAD_REQUEST, str(e))
+
+        try:
+            accepted = learner.submit(images, labels)
+        except RuntimeError as e:  # closed buffer: learner shutting down
+            return _Response.error(HTTPStatus.SERVICE_UNAVAILABLE, str(e))
+        if not accepted:
+            return _Response.error(
+                HTTPStatus.TOO_MANY_REQUESTS,
+                f"model {name!r} feedback buffer full "
+                f"({learner.buffer.capacity} examples); block shed",
+                retry=True,
+            )
+        return _Response.json(
+            HTTPStatus.OK,
+            {"accepted": int(len(images)), "buffered": int(learner.buffer.depth())},
+        )
 
     @staticmethod
     def _bridge(loop: asyncio.AbstractEventLoop, fut) -> asyncio.Future:

@@ -1,0 +1,513 @@
+"""repro.online: feedback ingestion -> background learner -> promotion.
+
+The acceptance contract (ISSUE 6): serve a model over HTTP, POST labeled
+feedback over a real socket, and assert that (a) the reload watcher
+promotes a learner-published checkpoint while predict traffic is in
+flight, and (b) the promoted engine's class sums are **bit-identical**
+to offline ``partial_fit`` on the same base + feedback stream —
+additive integer bundling makes online training exact, whatever
+chunking the transport and drain loop impose (DESIGN.md §10).
+"""
+
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import HDCConfig, HDCModel
+from repro.online import FeedbackBuffer, OnlineLearner
+from repro.serving import ModelRegistry, ServingEngine
+from repro.transport import (
+    HdcClient,
+    HdcHttpServer,
+    OverloadedError,
+    ReloadWatcher,
+    TransportError,
+    protocol,
+)
+
+RNG = np.random.default_rng(66)
+
+
+def _cfg(**kw):
+    base = dict(n_features=24, n_classes=4, d=128, levels=16,
+                similarity="hamming")
+    base.update(kw)
+    return HDCConfig(**base)
+
+
+def _trained(cfg, n=32):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return HDCModel.create(cfg).fit(x, y)
+
+
+def _feed(cfg, n):
+    x = np.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), np.float32)
+    y = np.asarray(RNG.integers(0, cfg.n_classes, (n,)), np.int32)
+    return x, y
+
+
+def _wait(cond, timeout_s=30.0, poll_s=0.01):
+    deadline = time.time() + timeout_s
+    while not cond():
+        if time.time() > deadline:
+            raise AssertionError("condition not reached in time")
+        time.sleep(poll_s)
+
+
+# ---------------------------------------------------------------------------
+# wire protocol: the feedback plane
+# ---------------------------------------------------------------------------
+
+
+def test_protocol_feedback_roundtrip():
+    images = RNG.uniform(0, 255, (5, 24)).astype(np.float32)
+    labels = np.asarray([0, 3, 2, 1, 0], np.int32)
+    body = protocol.encode_feedback(images, labels)
+    assert len(body) == 5 * (24 * 4 + 4)
+    got_x, got_y = protocol.decode_feedback(body, 24)
+    np.testing.assert_array_equal(got_x, images)
+    np.testing.assert_array_equal(got_y, labels)
+    with pytest.raises(ValueError, match="not a positive multiple"):
+        protocol.decode_feedback(body[:-3], 24)
+    with pytest.raises(ValueError, match="not a positive multiple"):
+        protocol.decode_feedback(b"", 24)
+
+
+def test_protocol_feedback_json_forms():
+    x, y = protocol.parse_feedback_json({"image": [1.0, 2.0], "label": 3})
+    assert x.shape == (1, 2) and y.tolist() == [3]
+    x, y = protocol.parse_feedback_json(
+        {"images": [[1.0], [2.0]], "labels": [0, 1]}
+    )
+    assert x.shape == (2, 1) and y.tolist() == [0, 1]
+    for bad in (
+        {},
+        [1.0],
+        {"image": [1.0]},                              # label missing
+        {"images": [[1.0]]},                           # labels missing
+        {"images": [[1.0]], "labels": [0, 1]},         # length mismatch
+        {"image": [1.0], "images": [[1.0]], "labels": [0], "label": 0},
+        {"images": [[1.0]], "labels": [0.5]},          # non-integral label
+    ):
+        with pytest.raises(ValueError):
+            protocol.parse_feedback_json(bad)
+
+
+# ---------------------------------------------------------------------------
+# FeedbackBuffer
+# ---------------------------------------------------------------------------
+
+
+def test_buffer_bounds_in_examples_all_or_nothing():
+    buf = FeedbackBuffer(capacity=10)
+    x, y = _feed(_cfg(n_features=3), 6)
+    assert buf.put(x, y)
+    assert not buf.put(x, y)  # 6 + 6 > 10: the whole block is shed
+    assert buf.snapshot() == {
+        "capacity": 10, "depth": 6, "n_ingested": 6, "n_shed": 6,
+    }
+    assert buf.put(x[:4], y[:4])  # exactly fills
+    assert buf.depth() == 10
+    assert buf.put(x[:0], y[:0])  # empty block is a no-op accept
+    with pytest.raises(ValueError, match="must be positive"):
+        FeedbackBuffer(0)
+    with pytest.raises(ValueError, match=r"\(n, H\) images"):
+        buf.put(x[:2], y[:3])
+
+
+def test_buffer_drain_preserves_arrival_order_and_splits():
+    buf = FeedbackBuffer(capacity=100)
+    h = 3
+    rows = np.arange(12, dtype=np.float32)[:, None].repeat(h, axis=1)
+    labels = np.arange(12, dtype=np.int32) % 4
+    buf.put(rows[:5], labels[:5])
+    buf.put(rows[5:], labels[5:])
+    x1, y1 = buf.drain(max_examples=8)  # splits the second block
+    np.testing.assert_array_equal(x1, rows[:8])
+    np.testing.assert_array_equal(y1, labels[:8])
+    x2, y2 = buf.drain(max_examples=None, timeout=0.0)  # the queued tail
+    np.testing.assert_array_equal(x2, rows[8:])
+    np.testing.assert_array_equal(y2, labels[8:])
+    assert buf.depth() == 0
+    assert buf.drain(timeout=0.0) is None
+
+
+def test_buffer_close_refuses_puts_but_stays_drainable():
+    buf = FeedbackBuffer()
+    x, y = _feed(_cfg(n_features=3), 4)
+    buf.put(x, y)
+    buf.close()
+    assert buf.closed
+    with pytest.raises(RuntimeError, match="closed"):
+        buf.put(x, y)
+    got = buf.drain(timeout=0.0)  # the final flush reads queued blocks out
+    assert got is not None and len(got[0]) == 4
+    assert buf.drain(timeout=None) is None  # closed + empty: no parking
+    buf.reopen()
+    assert buf.put(x, y)
+
+
+def test_buffer_close_wakes_a_parked_drain():
+    buf = FeedbackBuffer()
+    out = []
+    t = threading.Thread(target=lambda: out.append(buf.drain(timeout=30.0)))
+    t.start()
+    time.sleep(0.05)
+    buf.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and out == [None]
+
+
+# ---------------------------------------------------------------------------
+# OnlineLearner (no HTTP): drain, train, publish, drain-on-stop
+# ---------------------------------------------------------------------------
+
+
+def test_learner_trains_bit_identical_to_offline_partial_fit(tmp_path):
+    cfg = _cfg()
+    base = _trained(cfg)
+    base.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=8, start=True)
+    learner = OnlineLearner(
+        registry, "m", train_batch=16, publish_every_s=0.05,
+        poll_interval_s=0.01,
+    ).start()
+    assert registry.learner("m") is learner
+    with pytest.raises(ValueError, match="already has a learner"):
+        registry.attach_learner("m", object())
+
+    feed_x, feed_y = _feed(cfg, 40)
+    for i in range(0, 40, 7):  # uneven chunks: exactness must not care
+        assert learner.submit(feed_x[i : i + 7], feed_y[i : i + 7])
+    _wait(lambda: learner.snapshot()["lag_examples"] == 0)
+    _wait(lambda: learner.snapshot()["n_published"] >= 1)
+    learner.stop()
+    snap = learner.snapshot()
+    assert snap["n_trained"] == 40 and snap["n_errors"] == 0
+    assert snap["buffered"] == 0 and snap["base_step"] == 0
+    assert snap["step"] == snap["n_published"]
+
+    published = HDCModel.load(tmp_path / "ckpt")  # newest step
+    offline = base.partial_fit(feed_x, feed_y)
+    np.testing.assert_array_equal(
+        np.asarray(published.class_sums), np.asarray(offline.class_sums)
+    )
+    assert published.n_examples == offline.n_examples
+    registry.shutdown()
+    assert not learner.running()
+
+
+def test_learner_stop_drains_acknowledged_feedback(tmp_path):
+    """stop(drain=True) trains and publishes everything the buffer
+    acknowledged, even when no periodic publish ever fired."""
+    cfg = _cfg()
+    base = _trained(cfg)
+    base.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=8, start=True)
+    learner = OnlineLearner(
+        registry, "m", train_batch=64, publish_every_s=3600.0,
+        poll_interval_s=0.01,
+    ).start()
+    feed_x, feed_y = _feed(cfg, 24)  # below train_batch: stays pending
+    assert learner.submit(feed_x, feed_y)
+    learner.stop()  # drain=True is the default
+    snap = learner.snapshot()
+    assert snap["n_trained"] == 24 and snap["n_published"] == 1
+    offline = base.partial_fit(feed_x, feed_y)
+    published = HDCModel.load(tmp_path / "ckpt", step=1)
+    np.testing.assert_array_equal(
+        np.asarray(published.class_sums), np.asarray(offline.class_sums)
+    )
+    registry.shutdown()
+
+
+def test_learner_needs_a_checkpoint_source():
+    cfg = _cfg()
+    registry = ModelRegistry()
+    registry.register("m", ServingEngine(_trained(cfg), batch_size=8))
+    with pytest.raises(ValueError, match="checkpoint"):
+        OnlineLearner(registry, "m").start()
+    assert registry.learner("m") is None or not registry.learner("m").running()
+    registry.shutdown()
+
+
+def test_learner_attach_requires_registered_entry():
+    registry = ModelRegistry()
+    with pytest.raises(KeyError, match="unknown model"):
+        OnlineLearner(registry, "ghost").start()
+
+
+def test_shutdown_stops_learner_then_watcher_then_batcher(tmp_path):
+    """The teardown order contract: no new checkpoint can be published
+    (learner first), then no promotion can race the drain (watcher),
+    then the batcher serves its queued remainder."""
+    cfg = _cfg()
+    _trained(cfg).save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    batcher = registry.register_checkpoint(
+        "m", tmp_path / "ckpt", batch_size=8, start=True
+    )
+    learner = OnlineLearner(registry, "m", poll_interval_s=0.01).start()
+    watcher = ReloadWatcher(registry, "m", interval_s=0.02).start()
+
+    order = []
+    for obj, tag in ((learner, "learner"), (watcher, "watcher"),
+                     (batcher, "batcher")):
+        def spy(*a, _orig=obj.stop, _tag=tag, **kw):
+            order.append(_tag)
+            return _orig(*a, **kw)
+        obj.stop = spy
+    registry.shutdown()
+    assert order == ["learner", "watcher", "batcher"]
+    assert not learner.running() and not watcher.running()
+    registry.shutdown()  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# the HTTP feedback plane: validation + admission
+# ---------------------------------------------------------------------------
+
+
+def _online_stack(tmp_path, *, capacity=1 << 16, start_learner=False):
+    """Checkpoint-registered model + attached learner + HTTP server.
+    With ``start_learner=False`` the buffer fills deterministically (no
+    drain thread), which is how the shed tests hold depth steady."""
+    cfg = _cfg()
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=8, start=True)
+    learner = OnlineLearner(
+        registry, "m", capacity=capacity, train_batch=16,
+        publish_every_s=0.05, poll_interval_s=0.01,
+    )
+    if start_learner:
+        learner.start()
+    else:
+        registry.attach_learner("m", learner)
+    server = HdcHttpServer(registry).start()
+    client = HdcClient(*server.address)
+    return cfg, model, registry, server, client, learner
+
+
+def test_feedback_validation_rejects_at_the_boundary(tmp_path):
+    cfg, model, registry, server, client, learner = _online_stack(tmp_path)
+    x, _ = _feed(cfg, 4)
+    good_y = np.zeros(4, np.int32)
+    bad_y = np.full(4, cfg.n_classes, np.int32)  # one past the last class
+    try:
+        with pytest.raises(TransportError, match="unknown model") as e:
+            client.feedback("nope", x, good_y)
+        assert e.value.status == 404
+
+        # out-of-range labels: 400 on both wire forms, never trained
+        for binary in (True, False):
+            with pytest.raises(TransportError, match="label") as e:
+                client.feedback("m", x, bad_y, binary=binary)
+            assert e.value.status == 400
+
+        with pytest.raises(TransportError, match="features per image") as e:
+            client.feedback("m", np.zeros((2, 7), np.float32),
+                            np.zeros(2, np.int32), binary=False)
+        assert e.value.status == 400
+
+        # raw body misaligned to the (4H + 4)-byte record size
+        with pytest.raises(TransportError, match="not a positive multiple") as e:
+            client._json("POST", protocol.feedback_path("m"), b"\x00" * 13,
+                         {"Content-Type": protocol.CT_F32})
+        assert e.value.status == 400
+
+        with pytest.raises(TransportError, match="labels must be integers") as e:
+            client._json(
+                "POST", protocol.feedback_path("m"),
+                json.dumps({"images": x.tolist(), "labels": [0.5, 0, 0, 0]}
+                           ).encode(),
+                {"Content-Type": protocol.CT_JSON},
+            )
+        assert e.value.status == 400
+
+        with pytest.raises(TransportError, match="unsupported content type") as e:
+            client._json("POST", protocol.feedback_path("m"), b"x",
+                         {"Content-Type": "text/plain"})
+        assert e.value.status == 415
+
+        with pytest.raises(TransportError, match="POST-only") as e:
+            client._json("GET", protocol.feedback_path("m"))
+        assert e.value.status == 405
+
+        # none of the rejected payloads were ingested
+        assert learner.buffer.snapshot()["n_ingested"] == 0
+    finally:
+        client.close()
+        server.stop()
+        registry.shutdown()
+
+
+def test_feedback_sheds_on_full_buffer_and_503_when_closed(tmp_path):
+    cfg, model, registry, server, client, learner = _online_stack(
+        tmp_path, capacity=8
+    )
+    x, _ = _feed(cfg, 4)
+    y = np.zeros(4, np.int32)
+    try:
+        ack = client.feedback("m", x, y)
+        assert ack == {"accepted": 4, "buffered": 4}
+        assert client.feedback("m", x, y)["buffered"] == 8
+        with pytest.raises(OverloadedError, match="buffer full") as e:
+            client.feedback("m", x[:1], y[:1])  # 8 + 1 > 8: shed whole
+        assert e.value.status == 429 and e.value.payload["retry"] is True
+        snap = client.metrics()["m"]["online"]
+        assert snap["n_ingested"] == 8 and snap["n_shed"] == 1
+        health = client.healthz()["models"]["m"]["learner"]
+        assert health["capacity"] == 8 and not health["running"]
+
+        learner.buffer.close()  # a shutting-down learner is 503, not 429
+        with pytest.raises(TransportError, match="closed") as e:
+            client.feedback("m", x, y)
+        assert e.value.status == 503
+    finally:
+        client.close()
+        server.stop()
+        registry.shutdown()
+
+
+def test_feedback_404_without_a_learner(tmp_path):
+    cfg = _cfg()
+    _trained(cfg).save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=8, start=True)
+    server = HdcHttpServer(registry).start()
+    client = HdcClient(*server.address)
+    x, _ = _feed(cfg, 2)
+    try:
+        with pytest.raises(TransportError, match="no online learner") as e:
+            client.feedback("m", x, np.zeros(2, np.int32))
+        assert e.value.status == 404
+        assert client.metrics()["m"].get("online") is None  # key absent
+    finally:
+        client.close()
+        server.stop()
+        registry.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the closed loop over a real socket, traffic in flight
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_feedback_to_promotion_under_traffic(tmp_path):
+    cfg = _cfg()
+    base = _trained(cfg)
+    base.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint(
+        "m", tmp_path / "ckpt", batch_size=8, max_delay_ms=1.0, start=True
+    )
+    learner = OnlineLearner(
+        registry, "m", train_batch=32, publish_every_s=0.05,
+        poll_interval_s=0.01, keep_n=3,
+    ).start()
+    watcher = ReloadWatcher(registry, "m", interval_s=0.02).start()
+    server = HdcHttpServer(registry).start()
+    host, port = server.address
+
+    feed_x, feed_y = _feed(cfg, 96)
+    q = np.asarray(RNG.uniform(0, 255, (8, cfg.n_features)), np.float32)
+    stop = threading.Event()
+    n_preds = [0]
+    pound_errors = []
+
+    def pound():
+        try:
+            with HdcClient(host, port, timeout_s=60.0) as c:
+                while not stop.is_set():
+                    got = c.predict_batch("m", q)
+                    assert got.shape == (8,)
+                    n_preds[0] += 1
+        except BaseException as e:
+            pound_errors.append(e)
+
+    t = threading.Thread(target=pound)
+    t.start()
+    try:
+        with HdcClient(host, port, timeout_s=60.0) as client:
+            _wait(lambda: n_preds[0] >= 2)  # traffic flowing on step 0
+            for i in range(0, 96, 16):
+                ack = client.feedback("m", feed_x[i : i + 16],
+                                      feed_y[i : i + 16])
+                assert ack["accepted"] == 16
+            # the watcher must promote a learner-published step with the
+            # predict pound still running
+            _wait(lambda: registry.engine("m").model.n_examples
+                  == base.n_examples + 96)
+            n_at_promo = n_preds[0]
+            _wait(lambda: n_preds[0] >= n_at_promo + 2)  # and it kept going
+            promoted = registry.engine("m")
+            promoted_model, promoted_step = promoted.model, promoted.step
+            snap = client.metrics()["m"]
+            health = client.healthz()["models"]["m"]
+    finally:
+        stop.set()
+        t.join(timeout=60.0)
+        server.stop()
+        registry.shutdown()
+
+    assert not pound_errors, pound_errors
+    # (b) exactness: bit-identical to offline partial_fit on the stream
+    offline = base.partial_fit(feed_x, feed_y)
+    np.testing.assert_array_equal(
+        np.asarray(promoted_model.class_sums), np.asarray(offline.class_sums)
+    )
+    assert promoted_model.n_examples == offline.n_examples
+    # (a) a learner-published step was watcher-promoted mid-traffic
+    assert promoted_step >= 1 and watcher.n_promotions >= 1
+    assert snap["n_reloads"] >= 1
+    online = snap["online"]
+    assert online["n_trained"] == 96 and online["n_shed"] == 0
+    assert online["n_published"] >= 1 and online["n_errors"] == 0
+    assert health["step"] == promoted_step
+    assert health["learner"]["running"] is True
+    # learner publishes bounded by keep_n=3 retention
+    assert len(CheckpointManager(tmp_path / "ckpt").all_steps()) <= 3
+    assert not learner.running() and not watcher.running()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint retention (satellite: prune-on-publish, torn-shard-safe)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_retention_prunes_old_steps_and_stale_tmp(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=2)
+    tree = {"a": np.arange(4)}
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [2, 3]  # newest keep_n survive every publish
+    # stale staging debris behind the window is collected on publish;
+    # a live (newer-step) staging attempt is never touched
+    (tmp_path / "step_000000001.tmp").mkdir()
+    (tmp_path / "step_000000009.tmp").mkdir()
+    mgr.save(4, tree)
+    assert mgr.all_steps() == [3, 4]
+    assert not (tmp_path / "step_000000001.tmp").exists()
+    assert (tmp_path / "step_000000009.tmp").exists()
+    got = mgr.restore(4, {"a": np.zeros(4, dtype=np.int64)})
+    np.testing.assert_array_equal(np.asarray(got["a"]), tree["a"])
+
+
+def test_checkpoint_retention_keep_n_zero_keeps_everything(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=0)
+    for s in range(5):
+        mgr.save(s, {"a": np.arange(2)})
+    (tmp_path / "step_000000000.tmp").mkdir()
+    mgr.save(5, {"a": np.arange(2)})
+    assert mgr.all_steps() == [0, 1, 2, 3, 4, 5]
+    assert (tmp_path / "step_000000000.tmp").exists()  # nothing pruned

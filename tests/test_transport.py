@@ -414,6 +414,154 @@ def test_watcher_promotion_under_inflight_http_traffic(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# client behavior under error statuses and dead sockets (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _canned(status: int, phrase: str, body: dict) -> bytes:
+    payload = json.dumps(body).encode()
+    return (
+        f"HTTP/1.1 {status} {phrase}\r\n"
+        f"Content-Type: {protocol.CT_JSON}\r\n"
+        f"Content-Length: {len(payload)}\r\n"
+        "Connection: keep-alive\r\n\r\n"
+    ).encode() + payload
+
+
+class _ScriptedServer:
+    """Real listening socket answering each request from a fixed script.
+
+    Each script entry is either canned response bytes or the string
+    ``"close"`` (read the request, then drop the connection without a
+    status line — the stale-keep-alive / mid-request-crash shape).
+    ``n_requests`` counts requests actually read off the wire, which is
+    what pins the client's retry behavior: HTTP error statuses must
+    reach the server exactly once, connection failures at most twice.
+    """
+
+    def __init__(self, script: list):
+        import socket
+
+        self._script = list(script)
+        self.n_requests = 0
+        self._sock = socket.socket()
+        self._sock.bind(("127.0.0.1", 0))
+        self._sock.listen(8)
+        self.address = self._sock.getsockname()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while self._script:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            with conn:
+                # makefile dups the fd: close it too, or the "close"
+                # action never sends a FIN and the client just waits
+                with conn.makefile("rb") as f:
+                    while self._script:
+                        if not self._read_request(f):
+                            break  # client closed / went away
+                        self.n_requests += 1
+                        action = self._script.pop(0)
+                        if action == "close":
+                            break  # no response: client sees a dead socket
+                        conn.sendall(action)
+
+    @staticmethod
+    def _read_request(f) -> bool:
+        line = f.readline()
+        if not line:
+            return False
+        length = 0
+        while True:
+            raw = f.readline()
+            if raw in (b"\r\n", b"\n", b""):
+                break
+            key, _, value = raw.decode("latin-1").partition(":")
+            if key.strip().lower() == "content-length":
+                length = int(value)
+        if length:
+            f.read(length)
+        return True
+
+    def close(self):
+        self._sock.close()
+        self._thread.join(timeout=10.0)
+
+
+@pytest.mark.parametrize(
+    "status,phrase,expect",
+    [
+        (413, "Payload Too Large", TransportError),
+        (429, "Too Many Requests", OverloadedError),
+        (503, "Service Unavailable", TransportError),
+    ],
+)
+def test_client_does_not_retry_http_error_statuses(status, phrase, expect):
+    """4xx/5xx are *answers*, not transport failures: the client raises
+    the mapped error (429 -> OverloadedError) after exactly one request
+    — re-sending a shed or oversize payload is the caller's decision."""
+    server = _ScriptedServer([_canned(status, phrase, {"error": "nope"})])
+    client = HdcClient(*server.address)
+    try:
+        with pytest.raises(expect, match="nope") as e:
+            client.healthz()
+        assert e.value.status == status
+        assert server.n_requests == 1
+    finally:
+        client.close()
+        server.close()
+
+
+def test_client_retries_once_on_stale_keepalive_socket():
+    """First request served, connection dropped, second request hits the
+    stale socket: the client reconnects and retries exactly once."""
+    ok = _canned(200, "OK", {"status": "ok"})
+    server = _ScriptedServer(["close", ok])
+    client = HdcClient(*server.address)
+    try:
+        assert client.healthz() == {"status": "ok"}
+        assert server.n_requests == 2  # dead-socket read + the retry
+    finally:
+        client.close()
+        server.close()
+
+
+def test_client_propagates_second_consecutive_connection_failure():
+    import http.client
+
+    server = _ScriptedServer(["close", "close"])
+    client = HdcClient(*server.address)
+    try:
+        with pytest.raises((http.client.HTTPException, ConnectionError)):
+            client.healthz()
+        assert server.n_requests == 2  # retried once, then gave up
+    finally:
+        client.close()
+        server.close()
+
+
+def test_predict_json_non_numeric_answers_400_not_500(stack):
+    """A JSON body with non-numeric entries (objects raise TypeError
+    from np.asarray, strings ValueError) is a malformed payload (400),
+    never an internal error (500)."""
+    cfg = _cfg()
+    registry, server, client = stack(_trained(cfg), "m")
+    for entry in ({"not": "a number"}, "x"):
+        body = json.dumps(
+            {"image": [1.0, entry] + [0.0] * (cfg.n_features - 2)}
+        )
+        with pytest.raises(TransportError) as e:
+            client._json("POST", protocol.predict_path("m"), body.encode(),
+                         {"Content-Type": protocol.CT_JSON})
+        assert e.value.status == 400
+    assert client.healthz()["status"] == "ok"  # connection survived
+
+
+# ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
 
