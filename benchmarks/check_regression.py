@@ -1,0 +1,222 @@
+"""CI perf-regression gate over the committed benchmark artifacts.
+
+Compares each ``artifacts/bench/BENCH_*.json`` produced by the current
+build against ``benchmarks/baselines.json`` and fails the build (exit 1)
+when a gated metric regresses past its tolerance band:
+
+  * direction "higher" (throughputs): fail if
+    ``current < baseline * (1 - tol)``
+  * direction "lower" (latencies): fail if
+    ``current > baseline * (1 + tol)``
+
+A missing artifact, a missing metric path, or a null/NaN value fails
+too — a gate that silently skips is no gate.
+
+Stdlib-only on purpose: the gate must be runnable (and must fail
+loudly) even on a machine where jax itself is broken.
+
+Usage::
+
+    python -m benchmarks.check_regression                  # gate (CI step)
+    python -m benchmarks.check_regression --update-baseline
+        # rewrite baselines.json from the current artifacts (run the five
+        # --fast benchmarks first); commit the result when a perf change
+        # is intentional
+    python -m benchmarks.check_regression --artifacts DIR --baseline FILE
+
+Default tolerances are 0.25 for throughput (>25 % drop fails, per
+DESIGN.md §11) and 0.50 for latency (>50 % growth fails).  The
+committed ``baselines.json`` deliberately carries *wider* bands on the
+wall-clock metrics — CI runners are slower and noisier than the dev
+machine that wrote the baselines — while exact-arithmetic metrics (the
+codebook bytes ratio) stay tight.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+HIGHER, LOWER = "higher", "lower"
+TOL_THROUGHPUT = 0.25  # fail if throughput drops more than 25%
+TOL_LATENCY = 0.50  # fail if a latency grows more than 50%
+
+# The gated metrics per artifact: (dotted path, direction, tolerance).
+# --update-baseline resolves these against the current artifacts and
+# writes the result (path + direction + tol + baseline value) into
+# baselines.json; the gate itself reads only baselines.json, so the
+# committed file is the single source of truth for what CI enforces.
+SPECS: dict[str, list[tuple[str, str, float]]] = {
+    "BENCH_train": [
+        ("summary.fused_img_per_s", HIGHER, 3 * TOL_THROUGHPUT),
+        ("summary.speedup", HIGHER, 2 * TOL_THROUGHPUT),
+    ],
+    "BENCH_serve": [
+        ("encoders.uhd.batcher.img_per_s", HIGHER, 3 * TOL_THROUGHPUT),
+        ("encoders.uhd_dynamic.batcher.img_per_s", HIGHER, 3 * TOL_THROUGHPUT),
+        ("encoders.uhd.batcher.p99_ms", LOWER, 6 * TOL_LATENCY),
+        ("encoders.uhd_dynamic.batcher.p99_ms", LOWER, 6 * TOL_LATENCY),
+    ],
+    "BENCH_encode_dynamic": [
+        # exact arithmetic (codebook byte counts): tight band
+        ("summary.bytes_ratio_min", HIGHER, 0.01),
+        ("summary.per_levels.16.dynamic_img_per_s", HIGHER, 3 * TOL_THROUGHPUT),
+    ],
+    "BENCH_transport": [
+        ("achieved_rps", HIGHER, 3 * TOL_THROUGHPUT),
+        ("p99_ms", LOWER, 6 * TOL_LATENCY),
+    ],
+    "BENCH_online": [
+        ("ingest_eps", HIGHER, 3 * TOL_THROUGHPUT),
+        ("publish_to_promote_ms", LOWER, 6 * TOL_LATENCY),
+        ("predict_p99_ms_active", LOWER, 6 * TOL_LATENCY),
+    ],
+}
+
+_REPO = Path(__file__).resolve().parent.parent
+DEFAULT_ARTIFACTS = _REPO / "artifacts" / "bench"
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baselines.json"
+
+
+def lookup(obj, dotted: str):
+    """Resolve "a.b.0.c" through nested dicts/lists; None if absent."""
+    cur = obj
+    for part in dotted.split("."):
+        if isinstance(cur, dict):
+            if part not in cur:
+                return None
+            cur = cur[part]
+        elif isinstance(cur, list):
+            try:
+                cur = cur[int(part)]
+            except (ValueError, IndexError):
+                return None
+        else:
+            return None
+    return cur
+
+
+def _usable(value) -> bool:
+    return (
+        isinstance(value, (int, float))
+        and not isinstance(value, bool)
+        and math.isfinite(value)
+    )
+
+
+def load_artifact(artifacts_dir: Path, name: str) -> dict | None:
+    path = artifacts_dir / f"{name}.json"
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def update_baseline(artifacts_dir: Path, baseline_path: Path) -> int:
+    """Resolve SPECS against the current artifacts -> baselines.json."""
+    out: dict[str, list[dict]] = {}
+    missing = []
+    for name, checks in sorted(SPECS.items()):
+        artifact = load_artifact(artifacts_dir, name)
+        if artifact is None:
+            missing.append(f"{name}.json not found in {artifacts_dir}")
+            continue
+        entries = []
+        for dotted, direction, tol in checks:
+            value = lookup(artifact, dotted)
+            if not _usable(value):
+                missing.append(f"{name}:{dotted} is {value!r}")
+                continue
+            entries.append({
+                "path": dotted,
+                "direction": direction,
+                "tol": tol,
+                "baseline": value,
+            })
+        out[name] = entries
+    if missing:
+        print("cannot update baseline; run the benchmarks first:")
+        for m in missing:
+            print(f"  - {m}")
+        return 1
+    baseline_path.write_text(json.dumps(out, indent=2) + "\n")
+    n = sum(len(v) for v in out.values())
+    print(f"wrote {n} baselines across {len(out)} artifacts to {baseline_path}")
+    return 0
+
+
+def check(artifacts_dir: Path, baseline_path: Path) -> int:
+    if not baseline_path.exists():
+        print(f"no baseline file at {baseline_path}; "
+              "run with --update-baseline first")
+        return 1
+    baselines = json.loads(baseline_path.read_text())
+    failures: list[str] = []
+    n_checked = 0
+    for name, entries in sorted(baselines.items()):
+        artifact = load_artifact(artifacts_dir, name)
+        if artifact is None:
+            failures.append(f"{name}: artifact {name}.json missing "
+                            f"from {artifacts_dir}")
+            continue
+        for entry in entries:
+            dotted, direction = entry["path"], entry["direction"]
+            tol, base = float(entry["tol"]), float(entry["baseline"])
+            n_checked += 1
+            value = lookup(artifact, dotted)
+            if not _usable(value):
+                failures.append(
+                    f"{name}:{dotted} = {value!r} (baseline {base:g}); "
+                    "metric missing or non-finite"
+                )
+                continue
+            if direction == HIGHER:
+                bound = base * (1.0 - tol)
+                if value < bound:
+                    failures.append(
+                        f"{name}:{dotted} = {value:g} fell below "
+                        f"{bound:g} (baseline {base:g}, -{tol:.0%} tolerance)"
+                    )
+            elif direction == LOWER:
+                bound = base * (1.0 + tol)
+                if value > bound:
+                    failures.append(
+                        f"{name}:{dotted} = {value:g} grew past "
+                        f"{bound:g} (baseline {base:g}, +{tol:.0%} tolerance)"
+                    )
+            else:
+                failures.append(
+                    f"{name}:{dotted}: unknown direction {direction!r}"
+                )
+    if failures:
+        print(f"PERF REGRESSION: {len(failures)} of {n_checked} gated "
+              "metrics failed")
+        for f in failures:
+            print(f"  FAIL {f}")
+        print("\nif the change is intentional, refresh the baselines with\n"
+              "  python -m benchmarks.check_regression --update-baseline\n"
+              "and commit benchmarks/baselines.json with an explanation.")
+        return 1
+    print(f"perf gate ok: {n_checked} metrics within tolerance "
+          f"of {baseline_path.name}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--artifacts", type=Path, default=DEFAULT_ARTIFACTS,
+                    help="directory holding BENCH_*.json")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline file to check against / rewrite")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current artifacts")
+    args = ap.parse_args()
+    if args.update_baseline:
+        return update_baseline(args.artifacts, args.baseline)
+    return check(args.artifacts, args.baseline)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -153,6 +153,7 @@ def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
                 break
             time.sleep(0.05)
         snap = learner.snapshot()
+        publish_pcts = learner.publish_hist.percentiles_ms((50.0, 99.0))
         promote_lat = [
             promote_t[s] - publish_t[s] for s in promote_t if s in publish_t
         ]
@@ -174,6 +175,9 @@ def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
         "n_feedback_shed": int(n_shed),
         "ingest_eps": float(ingest_eps),
         "publish_to_promote_ms": p2p_ms,
+        # checkpoint save latency from the learner's own histogram
+        "publish_p50_ms": publish_pcts["p50_ms"],
+        "publish_p99_ms": publish_pcts["p99_ms"],
         "n_published": int(snap["n_published"]),
         "n_promoted": len(promote_t),
         "n_trained": int(snap["n_trained"]),

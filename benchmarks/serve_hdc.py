@@ -98,6 +98,8 @@ def run_encoder(encoder: str, *, fast: bool, d: int) -> dict:
             "img_per_s": stream_n / wall,
             **{k: snap[k] for k in
                ("p50_ms", "p99_ms", "mean_ms", "batch_occupancy", "n_batches")},
+            # per-stage breakdown (queue/assembly/device/write histograms)
+            "stages": snap["stages"],
         },
     }
 

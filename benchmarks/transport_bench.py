@@ -139,6 +139,10 @@ def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
         lat, n_ok, n_shed, n_error, wall = _open_loop(
             host, port, encoder, images, offered_rps=offered, n=n_open
         )
+        # server-side stage breakdown (queue/assembly/device/write) for
+        # the artifact, scraped over the wire like a real fleet would
+        with HdcClient(host, port, timeout_s=30.0) as c:
+            stages = c.metrics()[encoder]["stages"]
     finally:
         server.stop()
         registry.shutdown()
@@ -174,6 +178,7 @@ def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
         "n_errors": n_error,
         "max_queue_depth": max_depth,
         "saturation_factor": saturation,
+        "stages": stages,
     }
     save_artifact("BENCH_transport", payload)
     return payload

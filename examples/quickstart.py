@@ -10,6 +10,11 @@ and `HDCModel` (codebooks + class-hypervector state as one pytree, with
 Next steps: `examples/serve_http.py` puts a trained model behind HTTP;
 `examples/online_learning.py` keeps it learning from labeled feedback
 traffic after deployment (DESIGN.md §10).
+
+Observability: once serving, the same server exposes `/metrics` (JSON,
+or Prometheus text with `Accept: text/plain`) and `/v1/traces` — a
+ring of per-request queue/assembly/device/write spans plus lifecycle
+events. `examples/scrape_metrics.py` walks both (DESIGN.md §11).
 """
 
 import sys

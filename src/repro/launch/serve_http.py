@@ -86,7 +86,7 @@ def run_smoke(args) -> int:
     print(f"trained {len(ds.train_images)} images + checkpointed step 0 "
           f"({time.time()-t0:.1f}s) -> {ckpt_dir}")
 
-    registry = ModelRegistry()
+    registry = ModelRegistry(trace_jsonl=args.trace_jsonl)
     batcher = registry.register_checkpoint(
         name, ckpt_dir, step=0, batch_size=args.batch, impl=args.impl,
         max_depth=args.max_queue_depth, start=True,
@@ -99,6 +99,7 @@ def run_smoke(args) -> int:
     server = HdcHttpServer(
         registry, host=args.host, port=args.port,
         max_body_bytes=args.max_body_bytes,
+        enable_profiling=args.enable_profiling,
     ).start()
     host, port = server.address
     print(f"serving {engine0.describe()}")
@@ -174,8 +175,31 @@ def run_smoke(args) -> int:
     with HdcClient(host, port) as client:
         snap = client.metrics()[name]
         health = client.healthz()["models"][name]
+        trace_entries = client.traces()
+        prom = client.metrics(prometheus=True)
     assert snap["n_reloads"] >= 1, snap
     assert health["step"] == 1 and health["watcher"]["n_promotions"] >= 1
+
+    # observability (DESIGN.md §11): every streamed request left a trace
+    # whose four spans are disjoint sub-intervals of [submit, done] —
+    # their sum can never exceed the end-to-end latency
+    req_traces = [t for t in trace_entries if t["kind"] == "request"]
+    assert len(req_traces) >= min(args.requests, 1024), len(req_traces)
+    for t in req_traces:
+        spans = t["spans"]
+        assert set(spans) == {"queue_ms", "assembly_ms", "device_ms",
+                              "write_ms"}, spans
+        assert sum(spans.values()) <= t["e2e_ms"] + 1e-6, t
+    promo_events = [t for t in trace_entries
+                    if t["kind"] == "event" and t["event"] == "promotion"]
+    assert promo_events and promo_events[-1]["step"] == 1, promo_events
+    assert "uhd_requests_total" in prom, prom[:200]
+    assert "uhd_stage_latency_seconds_bucket" in prom, prom[:200]
+    print(f"traces: {len(req_traces)} request spans + {len(promo_events)} "
+          "promotion events, span sums <= e2e: OK")
+    print(f"prometheus exposition: {len(prom.splitlines())} lines OK")
+    if args.trace_jsonl:
+        print(f"trace JSONL streamed to {args.trace_jsonl}")
 
     # -- 5: drain shutdown -------------------------------------------------
     server.stop()
@@ -198,7 +222,7 @@ def run_smoke(args) -> int:
 def run_serve(args) -> int:
     """Serve an existing checkpoint dir over HTTP until interrupted; the
     watcher follows whatever steps the trainer publishes there."""
-    registry = ModelRegistry()
+    registry = ModelRegistry(trace_jsonl=args.trace_jsonl)
     registry.register_checkpoint(
         args.name, args.ckpt, batch_size=args.batch, impl=args.impl,
         max_depth=args.max_queue_depth, start=True,
@@ -210,6 +234,7 @@ def run_serve(args) -> int:
     server = HdcHttpServer(
         registry, host=args.host, port=args.port,
         max_body_bytes=args.max_body_bytes,
+        enable_profiling=args.enable_profiling,
     ).start()
     print(f"serving {registry.engine(args.name).describe()}")
     print(f"listening on http://{server.host}:{server.port} — Ctrl-C to stop")
@@ -254,6 +279,11 @@ def main(argv=None) -> int:
                     help="admission bound: queued requests before 429")
     ap.add_argument("--max-body-bytes", type=int, default=4 << 20,
                     help="admission bound: request payload before 413")
+    ap.add_argument("--trace-jsonl", default=None,
+                    help="stream finished trace entries to this JSONL file")
+    ap.add_argument("--enable-profiling", action="store_true",
+                    help="allow POST /v1/debug/profile (jax.profiler "
+                         "capture); off by default")
     args = ap.parse_args(argv)
 
     if args.smoke:

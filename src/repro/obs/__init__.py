@@ -1,0 +1,36 @@
+"""repro.obs — observability for the serving stack (DESIGN.md §11).
+
+Three primitives, all stdlib + thread-safe, shared by `repro.serving`,
+`repro.transport`, and `repro.online`:
+
+  * :class:`LatencyHistogram` — fixed log-spaced buckets, constant
+    memory, exact counts, mergeable across instances by bucket-wise
+    addition (the property the old bounded-deque reservoir lacked:
+    percentiles of a merged histogram equal percentiles of the merged
+    observation stream, so per-model and future per-replica metrics
+    combine honestly).
+  * :class:`TraceBuffer` / :class:`RequestTrace` — per-request spans
+    (queue → batch assembly → device step → response write) plus
+    structured lifecycle events (watcher promotions, learner
+    publishes) in one bounded in-process ring, exposed over
+    ``GET /v1/traces`` and exportable as JSONL for offline analysis.
+  * :func:`render_prometheus` — Prometheus text exposition
+    (``uhd_*`` counters/gauges/histograms) for ``GET /metrics`` with
+    ``Accept: text/plain``.
+
+Plus the device-step profiling hooks: :class:`timed_block` (a
+``block_until_ready`` timing context around the jitted predict) and
+:func:`profile_capture` (an opt-in ``jax.profiler`` trace window behind
+``POST /v1/debug/profile``).
+"""
+
+from repro.obs.histogram import LatencyHistogram  # noqa: F401
+from repro.obs.profiler import profile_capture, timed_block  # noqa: F401
+from repro.obs.prometheus import render_prometheus  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    OWNER_BATCHER,
+    OWNER_TRANSPORT,
+    RequestTrace,
+    TraceBuffer,
+    new_request_id,
+)

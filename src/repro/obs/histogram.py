@@ -1,0 +1,181 @@
+"""Fixed-bucket log-spaced latency histograms: constant memory, exact
+counts, mergeable by bucket-wise addition.
+
+Why not the old bounded-deque reservoir: a reservoir's percentiles are
+exact only for the one stream it sampled — two reservoirs cannot be
+combined into the percentiles of the union (which observations fell
+out of each window is unrecoverable), so per-stage, per-model, and
+per-replica latency could never be aggregated honestly.  A fixed-bucket
+histogram keeps one int per bucket forever, counts every observation
+exactly, and merging is integer addition — the aggregate over any set
+of models/replicas has the same fidelity as a single instance.
+
+Bucket scheme: upper edges at ``lo * growth**i`` covering 1 µs .. 64 s
+with 16 buckets per decade (growth 10^(1/16) ≈ 1.155, so any
+interpolated percentile is within ~±8 % of the true value before
+interpolation even helps), plus one overflow bucket.  ~126 buckets
+total — about 1 KiB per histogram.  Percentile estimates interpolate
+linearly inside the winning bucket and are clamped to the exact
+observed [min, max], so a histogram never reports a latency outside
+what was actually seen.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+
+
+def log_bounds(
+    lo: float = 1e-6, hi: float = 64.0, per_decade: int = 16
+) -> tuple[float, ...]:
+    """Log-spaced bucket upper edges (seconds), ``lo`` .. ≥ ``hi``."""
+    if not (0 < lo < hi) or per_decade < 1:
+        raise ValueError(f"bad bucket spec lo={lo} hi={hi} per_decade={per_decade}")
+    n = math.ceil(per_decade * math.log10(hi / lo))
+    growth = 10.0 ** (1.0 / per_decade)
+    return tuple(lo * growth**i for i in range(n + 1))
+
+
+_DEFAULT_BOUNDS = log_bounds()
+
+
+class LatencyHistogram:
+    """Thread-safe fixed-bucket histogram over non-negative seconds."""
+
+    __slots__ = ("_bounds", "_counts", "_count", "_sum", "_min", "_max", "_lock")
+
+    def __init__(self, bounds: tuple[float, ...] | None = None):
+        bounds = _DEFAULT_BOUNDS if bounds is None else tuple(float(b) for b in bounds)
+        if len(bounds) < 2 or any(a >= b for a, b in zip(bounds, bounds[1:])):
+            raise ValueError("bounds must be at least two strictly increasing edges")
+        self._bounds = bounds
+        # counts[i] holds observations v with bounds[i-1] < v <= bounds[i]
+        # (Prometheus `le` semantics); counts[-1] is the +Inf overflow
+        self._counts = [0] * (len(bounds) + 1)
+        self._count = 0
+        self._sum = 0.0
+        self._min: float | None = None
+        self._max: float | None = None
+        self._lock = threading.Lock()
+
+    # -- writes ------------------------------------------------------------
+
+    def observe(self, seconds: float) -> None:
+        v = max(0.0, float(seconds))
+        i = bisect.bisect_left(self._bounds, v)
+        with self._lock:
+            self._counts[i] += 1
+            self._count += 1
+            self._sum += v
+            if self._min is None or v < self._min:
+                self._min = v
+            if self._max is None or v > self._max:
+                self._max = v
+
+    # -- merge -------------------------------------------------------------
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Bucket-wise sum of two histograms (same bounds) as a new one.
+
+        Exact: ``h1.merge(h2).percentile(p)`` equals the percentile of
+        one histogram fed both observation streams.
+        """
+        if self._bounds != other._bounds:
+            raise ValueError("cannot merge histograms with different bucket bounds")
+        out = LatencyHistogram(self._bounds)
+        with self._lock:
+            a = (list(self._counts), self._count, self._sum, self._min, self._max)
+        with other._lock:
+            b = (list(other._counts), other._count, other._sum, other._min, other._max)
+        out._counts = [x + y for x, y in zip(a[0], b[0])]
+        out._count = a[1] + b[1]
+        out._sum = a[2] + b[2]
+        mins = [m for m in (a[3], b[3]) if m is not None]
+        maxs = [m for m in (a[4], b[4]) if m is not None]
+        out._min = min(mins) if mins else None
+        out._max = max(maxs) if maxs else None
+        return out
+
+    # -- reads -------------------------------------------------------------
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum_s(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def bucket_bounds(self) -> tuple[float, ...]:
+        return self._bounds
+
+    def bucket_counts(self) -> list[int]:
+        with self._lock:
+            return list(self._counts)
+
+    def cumulative(self) -> list[tuple[float, int]]:
+        """(upper_edge, cumulative_count) pairs ending with (inf, count)
+        — exactly the Prometheus ``le`` bucket series."""
+        with self._lock:
+            counts = list(self._counts)
+        out, cum = [], 0
+        for bound, c in zip(self._bounds, counts):
+            cum += c
+            out.append((bound, cum))
+        out.append((math.inf, cum + counts[-1]))
+        return out
+
+    def percentile(self, p: float) -> float | None:
+        """Estimated p-th percentile in seconds (None when empty).
+
+        Linear interpolation inside the winning bucket, clamped to the
+        exact observed [min, max].
+        """
+        if not 0.0 <= p <= 100.0:
+            raise ValueError(f"percentile must be in [0, 100], got {p}")
+        with self._lock:
+            counts = list(self._counts)
+            count, vmin, vmax = self._count, self._min, self._max
+        if count == 0:
+            return None
+        target = min(max(math.ceil(p / 100.0 * count), 1), count)
+        cum = 0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self._bounds[i - 1] if i > 0 else 0.0
+                hi = self._bounds[i] if i < len(self._bounds) else vmax
+                val = lo + (target - cum) / c * (hi - lo)
+                return min(max(val, vmin), vmax)
+            cum += c
+        return vmax  # unreachable unless counts raced; max is always safe
+
+    def percentiles_ms(
+        self, ps: tuple[float, ...] = (50.0, 90.0, 99.0)
+    ) -> dict[str, float | None]:
+        out = {}
+        for p in ps:
+            v = self.percentile(p)
+            out[f"p{p:g}_ms"] = None if v is None else v * 1e3
+        return out
+
+    def snapshot(self) -> dict:
+        """Plain-JSON summary: exact count/total/mean, estimated
+        percentiles; absent values are None, never NaN."""
+        with self._lock:
+            count, total = self._count, self._sum
+            vmin, vmax = self._min, self._max
+        out = {
+            "count": int(count),
+            "total_ms": float(total * 1e3),
+            "mean_ms": (total / count * 1e3) if count else None,
+            "min_ms": None if vmin is None else vmin * 1e3,
+            "max_ms": None if vmax is None else vmax * 1e3,
+        }
+        out.update(self.percentiles_ms())
+        return out

@@ -1,0 +1,65 @@
+"""Device-step profiling hooks: wall timing + opt-in jax.profiler traces.
+
+`timed_block` is the cheap, always-on half — a context manager that
+times a block and (when asked) blocks on JAX outputs first, so the
+measured interval covers actual device execution, not dispatch:
+
+    with timed_block() as tb:
+        labels = tb.sync(engine.predict(batch))
+    metrics.observe_stage("device", tb.elapsed_s)
+
+`profile_capture` is the heavyweight, opt-in half: a bounded
+`jax.profiler` trace window written to a directory (viewable with
+TensorBoard / Perfetto), guarded behind ``POST /v1/debug/profile``
+which is disabled by default on `HdcHttpServer`.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+_capture_lock = threading.Lock()
+
+
+class timed_block:
+    """Context manager: ``elapsed_s`` wall time of the block, after
+    blocking on any JAX output handed to :meth:`sync`."""
+
+    __slots__ = ("label", "elapsed_s", "_t0")
+
+    def __init__(self, label: str = ""):
+        self.label = label
+        self.elapsed_s = 0.0
+
+    def __enter__(self) -> "timed_block":
+        self._t0 = time.perf_counter()
+        return self
+
+    def sync(self, out):
+        """Block until `out` (any pytree; numpy passes through) is
+        ready on the host, then return it unchanged."""
+        import jax
+
+        return jax.block_until_ready(out)
+
+    def __exit__(self, *exc) -> None:
+        self.elapsed_s = time.perf_counter() - self._t0
+
+
+def profile_capture(out_dir: str, ms: float) -> str:
+    """Capture a ``jax.profiler`` trace for ``ms`` milliseconds into
+    ``out_dir``; returns the directory.  One capture at a time —
+    concurrent calls raise RuntimeError instead of corrupting the
+    trace."""
+    import jax
+
+    if not _capture_lock.acquire(blocking=False):
+        raise RuntimeError("a profile capture is already in progress")
+    try:
+        jax.profiler.start_trace(str(out_dir))
+        time.sleep(max(0.0, float(ms)) / 1e3)
+        jax.profiler.stop_trace()
+    finally:
+        _capture_lock.release()
+    return str(out_dir)

@@ -1,0 +1,152 @@
+"""Prometheus text exposition (format 0.0.4) for the serving registry.
+
+`GET /metrics` with ``Accept: text/plain`` renders every registered
+model's serving metrics, transport admission counters, watcher
+promotion stats, and online-learner lag as ``uhd_*`` families —
+counters end in ``_total``, histograms emit the full cumulative
+``_bucket{le=...}`` series plus ``_sum``/``_count``, durations are in
+seconds (Prometheus base units).  The JSON form of `/metrics` stays
+the default, so nothing that scrapes the old endpoint breaks.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.obs.histogram import LatencyHistogram
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def _escape(value) -> str:
+    return (
+        str(value)
+        .replace("\\", "\\\\")
+        .replace('"', '\\"')
+        .replace("\n", "\\n")
+    )
+
+
+def _labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{_escape(v)}"' for k, v in labels.items())
+    return "{" + inner + "}"
+
+
+def _num(value) -> str:
+    if isinstance(value, bool):
+        return "1" if value else "0"
+    f = float(value)
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+class _Writer:
+    """Groups samples by family so HELP/TYPE headers are emitted once."""
+
+    def __init__(self):
+        self._families: dict[str, tuple[str, str, list[str]]] = {}
+
+    def sample(self, name, labels, value, *, mtype="gauge", help=""):
+        if value is None:
+            return
+        _, _, lines = self._families.setdefault(name, (mtype, help, []))
+        lines.append(f"{name}{_labels(labels)} {_num(value)}")
+
+    def histogram(self, name, labels, hist: LatencyHistogram, *, help=""):
+        mtype, _, lines = self._families.setdefault(name, ("histogram", help, []))
+        cumulative = hist.cumulative()
+        for bound, cum in cumulative:
+            le = "+Inf" if math.isinf(bound) else _num(bound)
+            lines.append(f"{name}_bucket{_labels({**labels, 'le': le})} {cum}")
+        lines.append(f"{name}_sum{_labels(labels)} {_num(hist.sum_s)}")
+        lines.append(f"{name}_count{_labels(labels)} {cumulative[-1][1]}")
+
+    def render(self) -> str:
+        out = []
+        for name, (mtype, help, lines) in self._families.items():
+            if help:
+                out.append(f"# HELP {name} {help}")
+            out.append(f"# TYPE {name} {mtype}")
+            out.extend(lines)
+        return "\n".join(out) + "\n"
+
+
+def render_prometheus(registry) -> str:
+    """Text exposition for one `ModelRegistry` (serving + transport
+    admission + watcher + online learner, per model)."""
+    w = _Writer()
+    for name in registry.names():
+        try:
+            batcher = registry.batcher(name)
+        except KeyError:  # racing an unregister
+            continue
+        m = batcher.metrics
+        labels = {"model": name}
+        counters = (
+            ("uhd_requests_total", m.n_requests, "requests completed"),
+            ("uhd_request_errors_total", m.n_errors, "requests failed"),
+            ("uhd_batches_total", m.n_batches, "device batches launched"),
+            ("uhd_slots_total", m.n_slots, "slots across launched batches"),
+            ("uhd_padded_slots_total", m.n_padded, "padded (empty) slots"),
+            ("uhd_shed_total", m.n_shed, "requests shed by admission control"),
+            ("uhd_rejected_total", m.n_rejected,
+             "requests rejected for non-load reasons"),
+            ("uhd_reloads_total", m.n_reloads, "hot engine swaps"),
+        )
+        for fam, value, help in counters:
+            w.sample(fam, labels, value, mtype="counter", help=help)
+        w.sample("uhd_queue_depth", labels, m.queue_depth,
+                 help="requests currently queued")
+        w.histogram("uhd_request_latency_seconds", labels, m.latency,
+                    help="end-to-end submit-to-resolve latency")
+        for stage, hist in m.stage.items():
+            w.histogram("uhd_stage_latency_seconds", {**labels, "stage": stage},
+                        hist, help="per-stage request latency")
+
+        watcher = registry.watcher(name)
+        if watcher is not None:
+            for fam, attr, help in (
+                ("uhd_watcher_polls_total", "n_polls", "checkpoint polls"),
+                ("uhd_watcher_promotions_total", "n_promotions",
+                 "checkpoints promoted into serving"),
+                ("uhd_watcher_errors_total", "n_errors", "failed poll/promote cycles"),
+            ):
+                w.sample(fam, labels, getattr(watcher, attr, None),
+                         mtype="counter", help=help)
+            w.sample("uhd_watcher_last_step", labels,
+                     getattr(watcher, "last_step", None),
+                     help="last promoted checkpoint step")
+            hist = getattr(watcher, "promote_hist", None)
+            if isinstance(hist, LatencyHistogram):
+                w.histogram("uhd_watcher_promote_seconds", labels, hist,
+                            help="reload-to-serve promotion latency "
+                                 "(load + warm + swap)")
+
+        learner = registry.learner(name)
+        if learner is not None:
+            snap = learner.snapshot()
+            for fam, key, help in (
+                ("uhd_online_ingested_total", "n_ingested", "feedback examples accepted"),
+                ("uhd_online_trained_total", "n_trained", "feedback examples trained"),
+                ("uhd_online_shed_total", "n_shed", "feedback blocks shed"),
+                ("uhd_online_published_total", "n_published", "checkpoints published"),
+                ("uhd_online_errors_total", "n_errors", "learner errors"),
+            ):
+                w.sample(fam, labels, snap.get(key), mtype="counter", help=help)
+            w.sample("uhd_online_buffered", labels, snap.get("buffered"),
+                     help="feedback examples waiting in the buffer")
+            w.sample("uhd_online_lag_examples", labels, snap.get("lag_examples"),
+                     help="ingested-but-untrained examples")
+            w.sample("uhd_online_staleness_seconds", labels,
+                     snap.get("staleness_s"),
+                     help="age of unpublished training progress")
+            hist = getattr(learner, "publish_hist", None)
+            if isinstance(hist, LatencyHistogram):
+                w.histogram("uhd_online_publish_seconds", labels, hist,
+                            help="checkpoint publish (save) latency")
+    return w.render()

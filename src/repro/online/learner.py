@@ -35,6 +35,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.hdc_model import HDCModel
+from repro.obs.histogram import LatencyHistogram
 from repro.online.buffer import FeedbackBuffer
 
 
@@ -83,6 +84,8 @@ class OnlineLearner:
         self._last_publish_t = time.perf_counter()
         self.last_error: BaseException | None = None
         self.n_errors = 0
+        self.publish_hist = LatencyHistogram()  # checkpoint save latency
+        self.last_publish_ms: float | None = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -231,12 +234,29 @@ class OnlineLearner:
 
     def _publish(self) -> None:
         step = (self.step or 0) + 1
+        t0 = time.perf_counter()
         self._model.save(self._source, step=step, keep_n=self.keep_n)
+        elapsed = time.perf_counter() - t0
+        self.publish_hist.observe(elapsed)
+        self.last_publish_ms = elapsed * 1e3
         with self._lock:
             self.step = step
             self.n_published += 1
             self._n_since_publish = 0
             self._last_publish_t = time.perf_counter()
+        traces = getattr(self._registry, "traces", None)
+        if traces is not None:
+            # t_mono = save *start*: the checkpoint cannot be promoted —
+            # and therefore no request span can carry the new step —
+            # before the save began, so this event provably precedes the
+            # first span served by the promoted engine
+            traces.record_event(
+                "publish",
+                model=self.name,
+                step=int(step),
+                duration_ms=elapsed * 1e3,
+                t_mono=t0,
+            )
         if self._on_publish is not None:
             try:
                 self._on_publish(self.name, step)
@@ -266,6 +286,7 @@ class OnlineLearner:
                 "staleness_s": float(staleness),
                 "base_step": self.base_step,
                 "step": self.step,
+                "last_publish_ms": self.last_publish_ms,
             }
 
     def describe(self) -> dict:

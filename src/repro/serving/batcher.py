@@ -32,6 +32,8 @@ import time
 
 import numpy as np
 
+from repro.obs.profiler import timed_block
+from repro.obs.trace import OWNER_BATCHER, OWNER_TRANSPORT, RequestTrace, TraceBuffer
 from repro.serving.engine import ServingEngine
 from repro.serving.metrics import ServingMetrics
 
@@ -49,7 +51,7 @@ class ServingFuture:
     """Handle for one queued request; resolves to an int label."""
 
     __slots__ = ("_event", "_label", "_error", "_callbacks", "_cb_lock",
-                 "t_submit", "t_done")
+                 "t_submit", "t_done", "trace")
 
     def __init__(self):
         self._event = threading.Event()
@@ -59,6 +61,7 @@ class ServingFuture:
         self._cb_lock = threading.Lock()
         self.t_submit = time.perf_counter()
         self.t_done: float | None = None
+        self.trace: RequestTrace | None = None
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -86,7 +89,8 @@ class ServingFuture:
         return self.t_done - self.t_submit
 
     def _resolve(self, label: int | None, error: BaseException | None = None):
-        self.t_done = time.perf_counter()
+        if self.t_done is None:  # drain loop may stamp it early so that
+            self.t_done = time.perf_counter()  # metrics precede the wakeup
         self._label, self._error = label, error
         with self._cb_lock:
             # set under the lock so add_done_callback never misses: it is
@@ -111,11 +115,15 @@ class MicroBatcher:
         max_delay_ms: float = 2.0,
         max_depth: int | None = None,
         metrics: ServingMetrics | None = None,
+        name: str | None = None,
+        traces: TraceBuffer | None = None,
     ):
         self.engine = engine
         self.max_delay_s = max_delay_ms / 1e3
         self.max_depth = max_depth  # None = unbounded (library use)
         self.metrics = metrics or ServingMetrics()
+        self.name = name  # model label stamped onto traces
+        self.traces = traces  # shared ring; None disables tracing
         self._queue: collections.deque[tuple[np.ndarray, ServingFuture]] = (
             collections.deque()
         )
@@ -126,12 +134,41 @@ class MicroBatcher:
 
     # -- submission --------------------------------------------------------
 
-    def submit(self, image) -> ServingFuture:
-        """Queue one (H,) image; returns a future resolving to its label."""
+    def _new_future(
+        self, request_id: str | None, trace_owner: str
+    ) -> ServingFuture:
+        """Future plus (when a trace ring is attached) its trace, whose
+        owner is fixed at creation — under the submit lock — so the drain
+        thread and the transport can never race to claim it."""
+        fut = ServingFuture()
+        if self.traces is not None:
+            fut.trace = RequestTrace(
+                request_id,
+                model=self.name,
+                owner=trace_owner,
+                t_submit=fut.t_submit,
+            )
+        return fut
+
+    def submit(
+        self,
+        image,
+        *,
+        request_id: str | None = None,
+        trace_owner: str = OWNER_BATCHER,
+    ) -> ServingFuture:
+        """Queue one (H,) image; returns a future resolving to its label.
+
+        ``request_id`` carries a caller-minted id (the HTTP boundary)
+        into the trace; direct callers get one minted here.  With
+        ``trace_owner=OWNER_TRANSPORT`` the caller takes responsibility
+        for finalizing the trace (it owns the response-write span);
+        otherwise the drain loop finalizes at resolve time.
+        """
         image = np.asarray(image, np.float32)
         if image.ndim != 1:
             raise ValueError(f"submit takes one (H,) image, got {image.shape}")
-        fut = ServingFuture()
+        fut = self._new_future(request_id, trace_owner)
         with self._cv:
             if self._closed:
                 self.metrics.rejected()
@@ -150,7 +187,13 @@ class MicroBatcher:
     def submit_many(self, images) -> list[ServingFuture]:
         return [self.submit(img) for img in np.asarray(images, np.float32)]
 
-    def submit_block(self, images) -> list[ServingFuture]:
+    def submit_block(
+        self,
+        images,
+        *,
+        request_ids: list[str] | None = None,
+        trace_owner: str = OWNER_BATCHER,
+    ) -> list[ServingFuture]:
         """All-or-nothing batch admission under one lock: either every
         image is queued or none is (`QueueFull`/`RuntimeError`).  The
         HTTP transport uses this so a mid-batch race with the depth
@@ -159,6 +202,10 @@ class MicroBatcher:
         images = np.asarray(images, np.float32)
         if images.ndim != 2:
             raise ValueError(f"submit_block takes (n, H) images, got {images.shape}")
+        if request_ids is not None and len(request_ids) != len(images):
+            raise ValueError(
+                f"{len(request_ids)} request_ids for {len(images)} images"
+            )
         with self._cv:
             if self._closed:
                 self.metrics.rejected(len(images))
@@ -172,7 +219,13 @@ class MicroBatcher:
                     f"queue depth {len(self._queue)} + {len(images)} exceeds "
                     f"max_depth {self.max_depth}; batch shed"
                 )
-            futures = [ServingFuture() for _ in images]
+            futures = [
+                self._new_future(
+                    request_ids[i] if request_ids is not None else None,
+                    trace_owner,
+                )
+                for i in range(len(images))
+            ]
             for img, fut in zip(images, futures):
                 self._queue.append((img, fut))
             self.metrics.enqueued(len(images))
@@ -198,7 +251,13 @@ class MicroBatcher:
         Caller must hold the lock; returns an empty list if idle."""
         engine = self.engine
         n = min(len(self._queue), engine.batch_size)
-        return engine, [self._queue.popleft() for _ in range(n)]
+        taken = [self._queue.popleft() for _ in range(n)]
+        if taken:
+            t_dequeue = time.perf_counter()
+            for _, fut in taken:
+                if fut.trace is not None:
+                    fut.trace.t_dequeue = t_dequeue
+        return engine, taken
 
     def _run_batch(
         self,
@@ -211,16 +270,55 @@ class MicroBatcher:
         for i, (image, _) in enumerate(taken):
             batch[i] = image
         self.metrics.observe_batch(len(taken), slots)
+        t_device_start = time.perf_counter()
+        for _, fut in taken:
+            if fut.trace is not None:
+                fut.trace.t_device_start = t_device_start
+                fut.trace.step = engine.step
         try:
-            labels = engine.predict(batch)
+            with timed_block("device") as tb:
+                labels = tb.sync(engine.predict(batch))
         except Exception as e:  # deliver the failure, keep serving
             for _, fut in taken:
-                fut._resolve(None, e)
+                fut.t_done = time.perf_counter()
                 self.metrics.observe_request(0.0, error=True)
+                self._finish_request(fut, error=True)
+                fut._resolve(None, e)
             return
+        t_device_end = t_device_start + tb.elapsed_s
+        # metrics/traces are recorded BEFORE the resolve wakes the waiter,
+        # so a scrape issued after a response arrives never reads a
+        # counter that has not seen that request yet
         for i, (_, fut) in enumerate(taken):
-            fut._resolve(int(labels[i]))
+            if fut.trace is not None:
+                fut.trace.t_device_end = t_device_end
+            fut.t_done = time.perf_counter()
             self.metrics.observe_request(fut.latency_s())
+            self._finish_request(fut)
+            fut._resolve(int(labels[i]))
+
+    def _finish_request(self, fut: ServingFuture, *, error: bool = False) -> None:
+        """Record per-stage latencies and, for batcher-owned traces,
+        finalize into the ring.  Transport-owned traces stay open — the
+        HTTP server owns the response-write span and finalizes after the
+        bytes are flushed."""
+        trace = fut.trace
+        if trace is None:
+            return
+        trace.t_resolve = fut.t_done
+        t0, td = trace.t_submit, trace.t_dequeue
+        tds, tde = trace.t_device_start, trace.t_device_end
+        if td is not None:
+            self.metrics.observe_stage("queue", td - t0)
+        if tds is not None and td is not None:
+            self.metrics.observe_stage("assembly", tds - td)
+        if tde is not None and tds is not None:
+            self.metrics.observe_stage("device", tde - tds)
+        if trace.owner == OWNER_TRANSPORT:
+            return
+        entry = trace.finalize(error=error)
+        if entry is not None and self.traces is not None:
+            self.traces.append(entry)
 
     def step(self) -> int:
         """Serve one micro-batch synchronously; returns requests served."""
@@ -295,6 +393,7 @@ class MicroBatcher:
                 self.metrics.dropped(len(pending))
                 for _, fut in pending:
                     fut._resolve(None, RuntimeError("server stopped"))
+                    self._finish_request(fut, error=True)
             self._cv.notify_all()
         if thread is not None:
             thread.join()

@@ -2,27 +2,36 @@
 
 One `ServingMetrics` instance rides with each micro-batcher.  All
 mutators are thread-safe (the drain thread and submitter threads update
-concurrently); latencies are kept in a bounded window so a long-lived
-server never grows unbounded state.  `snapshot()` is the only read API
-— a plain dict suitable for logging, the smoke CLI, and the benchmark
-artifact.
+concurrently).  Latencies live in fixed-bucket log-spaced
+:class:`~repro.obs.LatencyHistogram`\\ s — constant memory, exact
+counts, and mergeable across instances — one for end-to-end latency and
+one per pipeline stage (queue / assembly / device / write).
+`snapshot()` is the main read API — a plain strict-JSON dict (absent
+values are None, never NaN) suitable for logging, the smoke CLI, the
+`/metrics` endpoint, and the benchmark artifacts.
 """
 
 from __future__ import annotations
 
-import collections
 import threading
 import time
 
-import numpy as np
+from repro.obs.histogram import LatencyHistogram
+
+#: pipeline stages every request crosses, in order
+STAGES = ("queue", "assembly", "device", "write")
 
 
 class ServingMetrics:
-    """Counters + bounded latency reservoir for one serving queue."""
+    """Counters + per-stage latency histograms for one serving queue."""
 
     def __init__(self, window: int = 16384):
+        # `window` is kept for API compatibility with the old bounded
+        # reservoir; histograms are constant-memory so it is unused.
+        self.window = int(window)
         self._lock = threading.Lock()
-        self._latency_s = collections.deque(maxlen=window)
+        self.latency = LatencyHistogram()  # end-to-end submit→resolve
+        self.stage = {s: LatencyHistogram() for s in STAGES}
         self._t0 = time.perf_counter()
         self._t_first: float | None = None  # first/last request completion:
         self._t_last: float | None = None  # throughput excludes idle time
@@ -36,7 +45,7 @@ class ServingMetrics:
         self.n_rejected = 0  # rejected for non-load reasons (stopped batcher)
         self.queue_depth = 0  # requests currently waiting (gauge)
 
-    # -- mutators (called from batcher/registry threads) -----------------
+    # -- mutators (called from batcher/registry/transport threads) --------
 
     def enqueued(self, n: int = 1) -> None:
         with self._lock:
@@ -63,8 +72,16 @@ class ServingMetrics:
             self.n_requests += 1
             if error:
                 self.n_errors += 1
-            else:
-                self._latency_s.append(latency_s)
+        if not error:
+            self.latency.observe(latency_s)
+
+    def observe_stage(self, stage: str, seconds: float) -> None:
+        """Record one request's time inside a single pipeline stage."""
+        hist = self.stage.get(stage)
+        if hist is None:  # unknown stages register lazily (forward compat)
+            with self._lock:
+                hist = self.stage.setdefault(stage, LatencyHistogram())
+        hist.observe(seconds)
 
     def observe_reload(self) -> None:
         with self._lock:
@@ -80,27 +97,68 @@ class ServingMetrics:
         with self._lock:
             self.n_rejected += int(n)
 
+    # -- merge -------------------------------------------------------------
+
+    def merge(self, other: "ServingMetrics") -> "ServingMetrics":
+        """Combine two instances (e.g. per-model → fleet-wide) into a new
+        one.  Counters add; histograms merge bucket-wise, so percentiles
+        of the result equal percentiles of the union of observations."""
+        out = ServingMetrics()
+        with self._lock:
+            a = self._counter_state()
+        with other._lock:
+            b = other._counter_state()
+        for key in (
+            "n_requests", "n_batches", "n_slots", "n_padded", "n_errors",
+            "n_reloads", "n_shed", "n_rejected", "queue_depth",
+        ):
+            setattr(out, key, a[key] + b[key])
+        out._t0 = min(a["_t0"], b["_t0"])
+        firsts = [t for t in (a["_t_first"], b["_t_first"]) if t is not None]
+        lasts = [t for t in (a["_t_last"], b["_t_last"]) if t is not None]
+        out._t_first = min(firsts) if firsts else None
+        out._t_last = max(lasts) if lasts else None
+        out.latency = self.latency.merge(other.latency)
+        out.stage = {}
+        for name in dict.fromkeys((*self.stage, *other.stage)):
+            mine, theirs = self.stage.get(name), other.stage.get(name)
+            if mine is not None and theirs is not None:
+                out.stage[name] = mine.merge(theirs)
+            else:
+                solo = mine if mine is not None else theirs
+                out.stage[name] = solo.merge(LatencyHistogram(solo.bucket_bounds()))
+        return out
+
+    def _counter_state(self) -> dict:
+        return {
+            "n_requests": self.n_requests, "n_batches": self.n_batches,
+            "n_slots": self.n_slots, "n_padded": self.n_padded,
+            "n_errors": self.n_errors, "n_reloads": self.n_reloads,
+            "n_shed": self.n_shed, "n_rejected": self.n_rejected,
+            "queue_depth": self.queue_depth, "_t0": self._t0,
+            "_t_first": self._t_first, "_t_last": self._t_last,
+        }
+
     # -- reads ------------------------------------------------------------
 
     def latency_percentiles_ms(
         self, ps: tuple[float, ...] = (50.0, 99.0)
-    ) -> dict[str, float]:
-        with self._lock:
-            lat = np.asarray(self._latency_s, np.float64)
-        if lat.size == 0:
-            return {f"p{p:g}_ms": float("nan") for p in ps}
-        return {f"p{p:g}_ms": float(np.percentile(lat, p) * 1e3) for p in ps}
+    ) -> dict[str, float | None]:
+        """Estimated end-to-end percentiles; None (not NaN) when empty."""
+        return self.latency.percentiles_ms(ps)
 
     def snapshot(self) -> dict:
-        """Point-in-time view: counts, occupancy, p50/p99, req/s.
+        """Point-in-time view: counts, occupancy, p50/p99, req/s, and a
+        nested per-stage breakdown.
 
         `throughput_rps` spans first-to-last request completion (idle
         and setup time before/after traffic don't dilute it);
         `elapsed_s` is total time since construction.
 
-        Every value is a plain Python int or float (never a numpy
-        scalar) so ``json.dumps(snapshot())`` round-trips — the
-        `/metrics` HTTP endpoint dumps it verbatim.
+        Strict JSON by construction: every value is a plain Python
+        int/float/None (never a numpy scalar, never NaN/Inf), so
+        ``json.dumps(snapshot(), allow_nan=False)`` always succeeds —
+        the `/metrics` HTTP endpoint dumps it verbatim.
         """
         with self._lock:
             elapsed = time.perf_counter() - self._t0
@@ -109,7 +167,6 @@ class ServingMetrics:
                 if self._t_first is not None
                 else 0.0
             )
-            lat = np.asarray(self._latency_s, np.float64)
             out = {
                 "n_requests": int(self.n_requests),
                 "n_batches": int(self.n_batches),
@@ -121,16 +178,16 @@ class ServingMetrics:
                 "batch_occupancy": (
                     (self.n_slots - self.n_padded) / self.n_slots
                     if self.n_slots
-                    else float("nan")
+                    else None
                 ),
                 "elapsed_s": float(elapsed),
                 "throughput_rps": (
-                    self.n_requests / window if window > 0 else float("nan")
+                    self.n_requests / window if window > 0 else None
                 ),
             }
+        lat = self.latency.snapshot()
         for p in (50.0, 90.0, 99.0):
-            out[f"p{p:g}_ms"] = (
-                float(np.percentile(lat, p) * 1e3) if lat.size else float("nan")
-            )
-        out["mean_ms"] = float(lat.mean() * 1e3) if lat.size else float("nan")
+            out[f"p{p:g}_ms"] = lat[f"p{p:g}_ms"]
+        out["mean_ms"] = lat["mean_ms"]
+        out["stages"] = {name: h.snapshot() for name, h in self.stage.items()}
         return out

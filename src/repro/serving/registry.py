@@ -20,9 +20,11 @@ Hot-reload contract (pinned by tests/test_serving.py):
 
 from __future__ import annotations
 
+import os
 import threading
 from pathlib import Path
 
+from repro.obs.trace import TraceBuffer
 from repro.serving.batcher import MicroBatcher, ServingFuture
 from repro.serving.engine import ServingEngine
 
@@ -34,13 +36,30 @@ class ModelRegistry:
     (`batcher.engine`, swapped atomically under its condition lock) —
     the registry never holds a second engine reference that could skew
     from what the drain loop actually serves.
+
+    The registry also owns the process-wide :class:`TraceBuffer`: every
+    batcher it creates appends finished request traces there, and the
+    watcher/learner lifecycle events land in the same ring, so
+    ``GET /v1/traces`` shows the promotion timeline interleaved with the
+    requests it affected.
     """
 
-    def __init__(self):
+    def __init__(
+        self,
+        *,
+        trace_capacity: int = 2048,
+        trace_jsonl: str | os.PathLike | None = None,
+        trace_jsonl_sample: int = 1,
+    ):
         self._lock = threading.RLock()
         self._entries: dict[str, MicroBatcher] = {}
         self._watchers: dict[str, object] = {}  # name -> ReloadWatcher-like
         self._learners: dict[str, object] = {}  # name -> OnlineLearner-like
+        self.traces = TraceBuffer(
+            trace_capacity,
+            jsonl_path=trace_jsonl,
+            jsonl_sample=trace_jsonl_sample,
+        )
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -58,7 +77,8 @@ class ModelRegistry:
             if name in self._entries:
                 raise ValueError(f"model {name!r} already registered")
             batcher = MicroBatcher(
-                engine, max_delay_ms=max_delay_ms, max_depth=max_depth
+                engine, max_delay_ms=max_delay_ms, max_depth=max_depth,
+                name=name, traces=self.traces,
             )
             self._entries[name] = batcher
         if start:
@@ -156,6 +176,7 @@ class ModelRegistry:
         while True:
             names = self.names()
             if not names:
+                self.traces.close()  # flush + release the JSONL handle
                 return
             for name in names:
                 try:

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import http.client
 import json
+from urllib.parse import urlencode
 
 import numpy as np
 
@@ -111,8 +112,41 @@ class HdcClient:
     def models(self) -> dict:
         return self._json("GET", protocol.ROUTE_MODELS)["models"]
 
-    def metrics(self) -> dict:
-        return self._json("GET", protocol.ROUTE_METRICS)
+    def metrics(self, *, prometheus: bool = False) -> dict | str:
+        """Per-model metrics snapshot.  JSON dict by default;
+        ``prometheus=True`` negotiates the text exposition (returned as
+        a str, for scrapers and the stage-breakdown benchmarks)."""
+        if not prometheus:
+            return self._json("GET", protocol.ROUTE_METRICS)
+        status, content_type, payload = self._request(
+            "GET", protocol.ROUTE_METRICS, headers={"Accept": "text/plain"}
+        )
+        self._raise_for_status(status, content_type, payload)
+        if content_type != "text/plain":
+            raise TransportError(
+                status, f"expected text/plain exposition, got {content_type}"
+            )
+        return payload.decode("utf-8")
+
+    def traces(
+        self,
+        *,
+        n: int | None = None,
+        kind: str | None = None,
+        model: str | None = None,
+    ) -> list[dict]:
+        """Last-n entries from the server's trace ring: request span
+        dicts (kind="request") interleaved with lifecycle events
+        (kind="event" — watcher promotions, learner publishes)."""
+        params = {
+            k: v
+            for k, v in (("n", n), ("kind", kind), ("model", model))
+            if v is not None
+        }
+        path = protocol.ROUTE_TRACES
+        if params:
+            path = f"{path}?{urlencode(params)}"
+        return self._json("GET", path)["traces"]
 
     # -- predict -----------------------------------------------------------
 

@@ -32,13 +32,30 @@ import numpy as np
 CT_JSON = "application/json"
 CT_F32 = "application/x-hdc-f32"  # raw LE float32 image rows, C order
 CT_I32 = "application/x-hdc-i32"  # raw LE int32 labels
+CT_PROM = "text/plain; version=0.0.4; charset=utf-8"  # Prometheus exposition
 
 # canonical routes
 ROUTE_HEALTH = "/healthz"
 ROUTE_MODELS = "/v1/models"
 ROUTE_METRICS = "/metrics"
+ROUTE_TRACES = "/v1/traces"
+ROUTE_PROFILE = "/v1/debug/profile"
 PREDICT_SUFFIX = ":predict"
 FEEDBACK_SUFFIX = ":feedback"
+
+
+def sanitize_json(obj):
+    """Recursively replace NaN/±Inf floats with None so the result is
+    strict JSON (``json.dumps(..., allow_nan=False)`` safe).  The old
+    behavior — dumping a traffic-free snapshot's NaN percentiles as the
+    literal ``NaN`` — produced output every strict parser rejects."""
+    if isinstance(obj, float):
+        return obj if np.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: sanitize_json(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize_json(v) for v in obj]
+    return obj
 
 _F32 = np.dtype("<f4")
 _I32 = np.dtype("<i4")

@@ -22,8 +22,14 @@ Routes (DESIGN.md §8, §10):
   * ``GET /healthz`` — liveness + per-model step/queue-depth/watcher.
   * ``GET /v1/models`` — `ServingEngine.describe()` per model
     (including ``codebook_bytes``, the uHD deployment headline).
-  * ``GET /metrics`` — `ServingMetrics.snapshot()` per model, dumped
-    verbatim (snapshots are plain ints/floats by contract).
+  * ``GET /metrics`` — `ServingMetrics.snapshot()` per model as strict
+    JSON by default; ``Accept: text/plain`` negotiates Prometheus text
+    exposition instead (``uhd_*`` families, DESIGN.md §11).
+  * ``GET /v1/traces`` — last-n per-request spans + lifecycle events
+    from the shared trace ring (``?n=&kind=&model=`` filters).
+  * ``POST /v1/debug/profile?ms=N`` — opt-in ``jax.profiler`` capture
+    window; 403 unless the server was started with
+    ``enable_profiling=True``.
 
 Admission control — overload degrades loudly instead of OOMing:
 
@@ -40,12 +46,18 @@ from __future__ import annotations
 
 import asyncio
 import json
+import tempfile
 import threading
+import time
 from dataclasses import dataclass, field
 from http import HTTPStatus
-from urllib.parse import unquote, urlsplit
+from typing import Callable
+from urllib.parse import parse_qs, unquote, urlsplit
 
 from repro.core import encoding
+from repro.obs import profiler as _profiler
+from repro.obs.prometheus import render_prometheus
+from repro.obs.trace import OWNER_TRANSPORT, new_request_id
 from repro.serving.batcher import QueueFull
 from repro.serving.registry import ModelRegistry
 from repro.transport import protocol
@@ -61,6 +73,7 @@ class _Request:
     body: bytes
     keep_alive: bool
     oversize: int = 0  # nonzero: declared Content-Length that was refused
+    query: dict[str, str] = field(default_factory=dict)  # first value wins
 
     def header(self, name: str, default: str = "") -> str:
         return self.headers.get(name.lower(), default)
@@ -72,10 +85,18 @@ class _Response:
     body: bytes
     content_type: str
     extra_headers: dict[str, str] = field(default_factory=dict)
+    # invoked exactly once after the response bytes hit the socket (or
+    # the write fails) — the predict path uses this to close the
+    # response-write span, so a trace's e2e covers the flush
+    on_written: Callable[[], None] | None = None
 
     @classmethod
     def json(cls, status: HTTPStatus, obj) -> "_Response":
-        return cls(status, json.dumps(obj).encode(), protocol.CT_JSON)
+        # strict JSON at the boundary: NaN/Inf become null, and
+        # allow_nan=False turns any stowaway into a loud 500 instead of
+        # emitting a literal `NaN` every strict parser rejects
+        body = json.dumps(protocol.sanitize_json(obj), allow_nan=False)
+        return cls(status, body.encode(), protocol.CT_JSON)
 
     @classmethod
     def error(cls, status: HTTPStatus, message: str, **extra) -> "_Response":
@@ -94,6 +115,8 @@ class HdcHttpServer:
         max_queue_depth: int | None = 1024,
         max_body_bytes: int = 32 << 20,
         request_timeout_s: float = 60.0,
+        enable_profiling: bool = False,
+        profile_dir: str | None = None,
     ):
         self.registry = registry
         self.host = host
@@ -101,6 +124,11 @@ class HdcHttpServer:
         self.max_queue_depth = max_queue_depth
         self.max_body_bytes = int(max_body_bytes)
         self.request_timeout_s = float(request_timeout_s)
+        # POST /v1/debug/profile is 403 unless explicitly enabled: a
+        # profiler capture stalls the device and writes to disk, so it
+        # must be an operator decision, never a default
+        self.enable_profiling = bool(enable_profiling)
+        self.profile_dir = profile_dir
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
         self._server: asyncio.AbstractServer | None = None
@@ -233,7 +261,9 @@ class HdcHttpServer:
             version.upper() != "HTTP/1.0"
         )
         length = int(headers.get("content-length", "0") or "0")
-        path = unquote(urlsplit(target).path)
+        parts = urlsplit(target)
+        path = unquote(parts.path)
+        query = {k: v[0] for k, v in parse_qs(parts.query).items()}
         if length > self.max_body_bytes:
             # refuse without buffering: drain the wire in small chunks so
             # the connection stays usable, but never hold the payload
@@ -243,9 +273,12 @@ class HdcHttpServer:
                 if not chunk:
                     break
                 remaining -= len(chunk)
-            return _Request(method, path, headers, b"", keep_alive, oversize=length)
+            return _Request(
+                method, path, headers, b"", keep_alive,
+                oversize=length, query=query,
+            )
         body = await reader.readexactly(length) if length else b""
-        return _Request(method, path, headers, body, keep_alive)
+        return _Request(method, path, headers, body, keep_alive, query=query)
 
     async def _write_response(
         self, writer, response: _Response, keep_alive: bool
@@ -258,9 +291,19 @@ class HdcHttpServer:
             f"Connection: {'keep-alive' if keep_alive else 'close'}",
         ]
         head += [f"{k}: {v}" for k, v in response.extra_headers.items()]
-        writer.write(("\r\n".join(head) + "\r\n\r\n").encode("latin-1"))
-        writer.write(response.body)
-        await writer.drain()
+        try:
+            writer.write(("\r\n".join(head) + "\r\n\r\n").encode("latin-1"))
+            writer.write(response.body)
+            await writer.drain()
+        finally:
+            # fire even on a failed write so transport-owned traces are
+            # always finalized into the ring, never leaked
+            if response.on_written is not None:
+                callback, response.on_written = response.on_written, None
+                try:
+                    callback()
+                except Exception:
+                    pass  # observability must never break the connection
 
     # -- routing -----------------------------------------------------------
 
@@ -283,7 +326,15 @@ class HdcHttpServer:
         if path == protocol.ROUTE_MODELS and method == "GET":
             return self._models()
         if path == protocol.ROUTE_METRICS and method == "GET":
-            return self._metrics()
+            return self._metrics(request)
+        if path == protocol.ROUTE_TRACES and method == "GET":
+            return self._traces(request)
+        if path == protocol.ROUTE_PROFILE:
+            if method != "POST":
+                return _Response.error(
+                    HTTPStatus.METHOD_NOT_ALLOWED, "profile capture is POST-only"
+                )
+            return await self._profile(request)
         if path.startswith(protocol.ROUTE_MODELS + "/") and path.endswith(
             protocol.PREDICT_SUFFIX
         ):
@@ -331,7 +382,16 @@ class HdcHttpServer:
             }
         return _Response.json(HTTPStatus.OK, {"status": "ok", "models": models})
 
-    def _metrics(self) -> _Response:
+    def _metrics(self, request: _Request) -> _Response:
+        # content negotiation: Prometheus scrapers send Accept: text/plain
+        # (and would choke on JSON); everything else keeps the JSON
+        # snapshot the smoke CLI and benchmarks have always read
+        if "text/plain" in request.header("accept", "").lower():
+            return _Response(
+                HTTPStatus.OK,
+                render_prometheus(self.registry).encode(),
+                protocol.CT_PROM,
+            )
         out = {}
         for name in self.registry.names():
             try:
@@ -343,6 +403,62 @@ class HdcHttpServer:
                 snap["online"] = learner.snapshot()
             out[name] = snap
         return _Response.json(HTTPStatus.OK, out)
+
+    def _traces(self, request: _Request) -> _Response:
+        """Last-n view of the shared trace ring, optionally filtered:
+        ``GET /v1/traces?n=100&kind=request&model=mnist``."""
+        traces = getattr(self.registry, "traces", None)
+        if traces is None:
+            return _Response.json(HTTPStatus.OK, {"traces": []})
+        try:
+            n = int(request.query["n"]) if "n" in request.query else None
+        except ValueError:
+            return _Response.error(
+                HTTPStatus.BAD_REQUEST,
+                f"n must be an integer, got {request.query['n']!r}",
+            )
+        kind = request.query.get("kind")
+        if kind is not None and kind not in ("request", "event"):
+            return _Response.error(
+                HTTPStatus.BAD_REQUEST,
+                f'kind must be "request" or "event", got {kind!r}',
+            )
+        entries = traces.snapshot(n, kind=kind, model=request.query.get("model"))
+        return _Response.json(HTTPStatus.OK, {"traces": entries})
+
+    async def _profile(self, request: _Request) -> _Response:
+        """Opt-in ``jax.profiler`` capture window (DESIGN.md §11).
+        ``POST /v1/debug/profile?ms=N`` blocks for N ms while the
+        profiler records, then returns the trace directory."""
+        if not self.enable_profiling:
+            return _Response.error(
+                HTTPStatus.FORBIDDEN,
+                "profiling is disabled; start the server with "
+                "enable_profiling=True (serve_http --enable-profiling)",
+            )
+        try:
+            ms = float(request.query.get("ms", "100"))
+        except ValueError:
+            return _Response.error(
+                HTTPStatus.BAD_REQUEST,
+                f"ms must be a number, got {request.query['ms']!r}",
+            )
+        if not 0 < ms <= 60_000:
+            return _Response.error(
+                HTTPStatus.BAD_REQUEST, f"ms must be in (0, 60000], got {ms:g}"
+            )
+        out_dir = tempfile.mkdtemp(prefix="uhd_profile_", dir=self.profile_dir)
+        loop = asyncio.get_running_loop()
+        try:
+            # module attribute (not a direct import) so tests can stub
+            # the capture; executor keeps the event loop serving while
+            # the profiler sleeps through its window
+            path = await loop.run_in_executor(
+                None, _profiler.profile_capture, out_dir, ms
+            )
+        except RuntimeError as e:  # capture already in progress
+            return _Response.error(HTTPStatus.CONFLICT, str(e))
+        return _Response.json(HTTPStatus.OK, {"profile_dir": path, "ms": ms})
 
     # -- predict -----------------------------------------------------------
 
@@ -398,10 +514,19 @@ class HdcHttpServer:
             )
 
         loop = asyncio.get_running_loop()
+        # request id minted at the HTTP boundary; one span set per image
+        # (a batch of n fans out to n slot-level traces "rid/i")
+        rid = new_request_id()
+        request_ids = (
+            [rid] if len(images) == 1
+            else [f"{rid}/{i}" for i in range(len(images))]
+        )
         try:
             # all-or-nothing admission: a race with the depth bound or a
             # concurrent stop() can't strand a half-submitted batch
-            futures = batcher.submit_block(images)
+            futures = batcher.submit_block(
+                images, request_ids=request_ids, trace_owner=OWNER_TRANSPORT
+            )
         except QueueFull as e:  # batcher-level bound won the race; shed
             return _Response.error(HTTPStatus.TOO_MANY_REQUESTS, str(e), retry=True)
         except RuntimeError as e:  # stopping/stopped batcher: reject, 503
@@ -413,24 +538,72 @@ class HdcHttpServer:
                 asyncio.gather(*awaitables), timeout=self.request_timeout_s
             )
         except asyncio.TimeoutError:
+            self._abort_traces(futures)
             return _Response.error(
                 HTTPStatus.GATEWAY_TIMEOUT,
                 f"request not served within {self.request_timeout_s}s",
             )
         except RuntimeError as e:  # batcher stopped without drain mid-flight
+            self._abort_traces(futures)
             return _Response.error(HTTPStatus.SERVICE_UNAVAILABLE, str(e))
         except Exception as e:  # engine failure delivered through the future
+            self._abort_traces(futures)
             return _Response.error(
                 HTTPStatus.INTERNAL_SERVER_ERROR, f"{type(e).__name__}: {e}"
             )
 
+        t_write_start = time.perf_counter()
+        for fut in futures:
+            if fut.trace is not None:
+                fut.trace.t_write_start = t_write_start
         if protocol.CT_I32 in request.header("accept", ""):
-            return _Response(
+            response = _Response(
                 HTTPStatus.OK, protocol.encode_labels(labels), protocol.CT_I32
             )
-        if single:
-            return _Response.json(HTTPStatus.OK, {"label": int(labels[0])})
-        return _Response.json(HTTPStatus.OK, {"labels": [int(l) for l in labels]})
+        elif single:
+            response = _Response.json(HTTPStatus.OK, {"label": int(labels[0])})
+        else:
+            response = _Response.json(
+                HTTPStatus.OK, {"labels": [int(l) for l in labels]}
+            )
+        response.on_written = self._trace_writer(batcher, futures)
+        return response
+
+    def _trace_writer(self, batcher, futures) -> Callable[[], None]:
+        """Closure run after the response bytes are flushed: closes each
+        trace's write span and lands it in the shared ring — the trace's
+        e2e therefore covers queue -> device -> socket flush."""
+
+        def finish() -> None:
+            t_end = time.perf_counter()
+            traces = getattr(self.registry, "traces", None)
+            for fut in futures:
+                trace = fut.trace
+                if trace is None:
+                    continue
+                trace.t_write_end = t_end
+                if trace.t_write_start is not None:
+                    batcher.metrics.observe_stage(
+                        "write", t_end - trace.t_write_start
+                    )
+                entry = trace.finalize()
+                if entry is not None and traces is not None:
+                    traces.append(entry)
+
+        return finish
+
+    def _abort_traces(self, futures) -> None:
+        """Finalize transport-owned traces on an error path (timeout,
+        mid-flight stop, engine failure) so they land in the ring as
+        errors instead of leaking unfinished."""
+        traces = getattr(self.registry, "traces", None)
+        for fut in futures:
+            trace = fut.trace
+            if trace is None:
+                continue
+            entry = trace.finalize(error=True)
+            if entry is not None and traces is not None:
+                traces.append(entry)
 
     # -- feedback (online learning ingest, DESIGN.md §10) ------------------
 

@@ -23,7 +23,9 @@ promotion can never race the drain.
 from __future__ import annotations
 
 import threading
+import time
 
+from repro.obs.histogram import LatencyHistogram
 from repro.serving.registry import ModelRegistry
 
 
@@ -51,6 +53,8 @@ class ReloadWatcher:
         self.n_errors = 0
         self.last_step: int | None = None
         self.last_error: BaseException | None = None
+        self.promote_hist = LatencyHistogram()  # load + warm + swap time
+        self.last_promote_ms: float | None = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -93,6 +97,7 @@ class ReloadWatcher:
         and retried next interval — the live engine keeps serving.
         """
         self.n_polls += 1
+        t0 = time.perf_counter()
         try:
             step = self._registry.hot_reload(self.name)
         except KeyError:
@@ -104,8 +109,22 @@ class ReloadWatcher:
             self.last_error = e
             return None
         if step is not None:
+            elapsed = time.perf_counter() - t0
             self.n_promotions += 1
             self.last_step = step
+            self.promote_hist.observe(elapsed)
+            self.last_promote_ms = elapsed * 1e3
+            traces = getattr(self._registry, "traces", None)
+            if traces is not None:
+                # t_mono = promotion *start*: every span served by the
+                # new engine has t_device_start after this mark
+                traces.record_event(
+                    "promotion",
+                    model=self.name,
+                    step=int(step),
+                    duration_ms=elapsed * 1e3,
+                    t_mono=t0,
+                )
             if self._on_promote is not None:
                 try:
                     self._on_promote(self.name, step)
@@ -126,4 +145,5 @@ class ReloadWatcher:
             "n_promotions": int(self.n_promotions),
             "n_errors": int(self.n_errors),
             "last_step": self.last_step,
+            "last_promote_ms": self.last_promote_ms,
         }

@@ -454,6 +454,7 @@ def test_closed_loop_feedback_to_promotion_under_traffic(tmp_path):
             promoted_model, promoted_step = promoted.model, promoted.step
             snap = client.metrics()["m"]
             health = client.healthz()["models"]["m"]
+            trace_entries = client.traces()
     finally:
         stop.set()
         t.join(timeout=60.0)
@@ -478,6 +479,30 @@ def test_closed_loop_feedback_to_promotion_under_traffic(tmp_path):
     # learner publishes bounded by keep_n=3 retention
     assert len(CheckpointManager(tmp_path / "ckpt").all_steps()) <= 3
     assert not learner.running() and not watcher.running()
+    # (c) observability: the trace ring shows the promotion timeline
+    # interleaved with request spans, and ordering is provable — the
+    # publish event (stamped at checkpoint-save start) precedes the
+    # first span served by the promoted engine, as does the promotion
+    # event (stamped at hot-reload start)
+    events = [e for e in trace_entries if e["kind"] == "event"]
+    pubs = [
+        e for e in events
+        if e["event"] == "publish" and e["step"] == promoted_step
+    ]
+    promos = [
+        e for e in events
+        if e["event"] == "promotion" and e["step"] == promoted_step
+    ]
+    assert pubs and promos, events
+    new_spans = [
+        e for e in trace_entries
+        if e["kind"] == "request" and e["step"] == promoted_step
+    ]
+    assert new_spans  # pound traffic was served by the new engine
+    first_new = min(s["t_device_start"] for s in new_spans)
+    assert pubs[0]["t_mono"] <= first_new
+    assert promos[0]["t_mono"] <= first_new
+    assert pubs[0]["seq"] < promos[0]["seq"]  # publish recorded first
 
 
 # ---------------------------------------------------------------------------

@@ -459,10 +459,10 @@ def test_checkpoint_poll_latest(tmp_path):
 
 
 def test_metrics_snapshot_json_roundtrip():
-    """Satellite pin: snapshot() is plain ints/floats (no numpy scalars)
-    and survives json.dumps verbatim — the /metrics endpoint contract."""
+    """Satellite pin: snapshot() is plain ints/floats/None (no numpy
+    scalars, no NaN — absent values serialize as null) and survives
+    strict json.dumps verbatim — the /metrics endpoint contract."""
     import json
-    import math
 
     m = ServingMetrics(window=16)
     m.enqueued(np.int64(3))  # numpy ingress must not leak into counters
@@ -475,22 +475,26 @@ def test_metrics_snapshot_json_roundtrip():
     snap = m.snapshot()
     assert snap["n_shed"] == 2 and snap["n_rejected"] == 1
     for key, value in snap.items():
-        assert type(value) in (int, float), (key, type(value))
-    back = json.loads(json.dumps(snap))
-    for key, value in snap.items():
-        if isinstance(value, float) and math.isnan(value):
-            assert math.isnan(back[key]), key
-        else:
-            assert back[key] == value, key
-    # the empty snapshot (NaN percentiles) round-trips too
+        if key == "stages":
+            assert type(value) is dict
+            continue
+        assert value is None or type(value) in (int, float), (key, type(value))
+    # allow_nan=False: literal NaN/Infinity would raise here
+    back = json.loads(json.dumps(snap, allow_nan=False))
+    assert back == snap
+    # a fresh traffic-free snapshot is strict JSON too: the old reservoir
+    # emitted NaN percentiles, which json.dumps turns into the literal
+    # `NaN` — invalid JSON that strict parsers reject
     empty = ServingMetrics().snapshot()
-    assert math.isnan(json.loads(json.dumps(empty))["p99_ms"])
+    back = json.loads(json.dumps(empty, allow_nan=False))
+    assert back["p99_ms"] is None and back["throughput_rps"] is None
+    assert back["batch_occupancy"] is None
 
 
 def test_metrics_percentiles_and_counters():
     m = ServingMetrics(window=100)
     snap = m.snapshot()
-    assert np.isnan(snap["p99_ms"]) and snap["n_requests"] == 0
+    assert snap["p99_ms"] is None and snap["n_requests"] == 0
     m.enqueued(10)
     assert m.queue_depth == 10
     m.observe_batch(8, 8)

@@ -154,7 +154,11 @@ def test_http_control_plane(stack):
     snap = client.metrics()["m"]
     assert snap["n_requests"] >= 1
     # came through json.dumps on the server verbatim: plain types only
-    assert all(isinstance(v, (int, float, type(None))) for v in snap.values())
+    # (None for absent values, plus the nested per-stage breakdown)
+    assert all(
+        isinstance(v, (int, float, type(None), dict)) for v in snap.values()
+    )
+    assert set(snap["stages"]) >= {"queue", "assembly", "device", "write"}
 
 
 def test_http_errors(stack):
