@@ -12,9 +12,18 @@ Two phases against a live `HdcHttpServer` on a real socket:
      429 shed rate instead of an unbounded queue — exactly the
      degrade-loudly contract DESIGN.md §8 pins.
 
+``--replicas 1,4`` sweeps replica-fleet sizes (DESIGN.md §12): the
+offered load is calibrated ONCE against the first deployment and held
+fixed across the sweep, so the per-count p99/shed-rate series measures
+what adding replicas buys under identical pressure.  The fleet admission
+bound scales with the count (``8 * n`` queued requests) to keep
+per-replica backlog comparable.
+
 Emits the `BENCH_transport` artifact (artifacts/bench/
 BENCH_transport.json): p50/p99 end-to-end latency over the socket,
-achieved img/s, and the shed rate at the saturating offered load.
+achieved img/s, the shed rate at the saturating offered load, and — for
+a sweep — a ``replicas.<n>`` sub-dict per fleet size, gated by
+``check_regression.py``.
 """
 
 from __future__ import annotations
@@ -35,6 +44,9 @@ from repro.core import HDCConfig, HDCModel
 from repro.data import load_dataset
 from repro.serving import ModelRegistry
 from repro.transport import HdcClient, HdcHttpServer, OverloadedError
+
+SATURATION = 2.5
+DEPTH_PER_REPLICA = 8
 
 
 def _closed_loop_rate(host, port, name, images, *, workers=16, n=128) -> float:
@@ -107,40 +119,46 @@ def _open_loop(
     return latencies, n_ok, n_shed, n_error, wall
 
 
-def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
-    d = d or (1024 if fast else 4096)
-    n_train = 512 if fast else 2048
-    n_calib = 96 if fast else 256
-    n_open = 384 if fast else 2048
-    saturation = 2.5
+def _bench_deployment(
+    encoder: str,
+    ckpt: str,
+    images: np.ndarray,
+    *,
+    replicas: int,
+    n_calib: int,
+    n_open: int,
+    offered_rps: float | None,
+) -> dict:
+    """One fresh deployment (registry + server) at `replicas` fleet size.
 
-    ds = load_dataset("synth_mnist", n_train=n_train, n_test=256)
-    cfg = HDCConfig(
-        n_features=ds.n_features, n_classes=ds.n_classes, d=d, encoder=encoder
-    )
-    ckpt = tempfile.mkdtemp(prefix="hdc_transport_bench_")
-    HDCModel.create(cfg).fit(ds.train_images, ds.train_labels).save(ckpt, step=0)
-
+    With ``offered_rps=None`` the deployment calibrates its own
+    closed-loop rate first; otherwise the caller's fixed load is reused
+    (the sweep contract: identical pressure across fleet sizes).
+    """
     registry = ModelRegistry()
-    max_depth = 8
     # calibration runs unbounded (a shed would kill the closed-loop rate
     # measurement); the admission bound is applied just before the
     # open-loop phase, deliberately below the client concurrency so
     # saturation sheds (429) instead of queueing the overload away
-    registry.register_checkpoint(encoder, ckpt, batch_size=32, start=True)
+    registry.register_checkpoint(
+        encoder, ckpt, batch_size=32, replicas=replicas, start=True
+    )
+    entry_desc = registry.describe_entry(encoder)
     server = HdcHttpServer(registry, max_queue_depth=None).start()
     host, port = server.address
-    images = np.asarray(ds.test_images, np.float32)
-
     try:
-        base_rps = _closed_loop_rate(host, port, encoder, images, n=n_calib)
-        offered = saturation * base_rps
+        base_rps = None
+        if offered_rps is None:
+            base_rps = _closed_loop_rate(host, port, encoder, images, n=n_calib)
+            offered_rps = SATURATION * base_rps
+        max_depth = DEPTH_PER_REPLICA * replicas
         registry.batcher(encoder).max_depth = max_depth
         lat, n_ok, n_shed, n_error, wall = _open_loop(
-            host, port, encoder, images, offered_rps=offered, n=n_open
+            host, port, encoder, images, offered_rps=offered_rps, n=n_open
         )
         # server-side stage breakdown (queue/assembly/device/write) for
         # the artifact, scraped over the wire like a real fleet would
+        # (fleet-merged for pool deployments)
         with HdcClient(host, port, timeout_s=30.0) as c:
             stages = c.metrics()[encoder]["stages"]
     finally:
@@ -150,26 +168,13 @@ def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
     lat_ms = np.asarray(lat, np.float64) * 1e3
     p50 = float(np.percentile(lat_ms, 50)) if lat_ms.size else float("nan")
     p99 = float(np.percentile(lat_ms, 99)) if lat_ms.size else float("nan")
-    achieved = n_ok / wall
-    shed_rate = n_shed / max(1, n_ok + n_shed + n_error)
-    table(
-        f"HTTP transport, open loop at {saturation:g}x the closed-loop rate "
-        f"(D={d}, {encoder}, {jax.default_backend()})",
-        ["offered rps", "achieved rps", "shed rate", "p50 ms", "p99 ms",
-         "ok/shed/err"],
-        [[f"{offered:.0f}", f"{achieved:.0f}", f"{shed_rate:.2f}",
-          f"{p50:.2f}", f"{p99:.2f}", f"{n_ok}/{n_shed}/{n_error}"]],
-    )
-
-    payload = {
-        "device": jax.default_backend(),
-        "d": d,
-        "encoder": encoder,
+    return {
+        "n_replicas": replicas,
+        "placement": entry_desc["placement"],
         "closed_loop_rps": base_rps,
-        "offered_rps": offered,
-        "achieved_rps": achieved,
-        "img_per_s": achieved,
-        "shed_rate": shed_rate,
+        "offered_rps": offered_rps,
+        "achieved_rps": n_ok / wall,
+        "shed_rate": n_shed / max(1, n_ok + n_shed + n_error),
         "p50_ms": p50,
         "p99_ms": p99,
         "n_requests": n_open,
@@ -177,11 +182,82 @@ def run(fast: bool = False, d: int | None = None, encoder: str = "uhd") -> dict:
         "n_shed": n_shed,
         "n_errors": n_error,
         "max_queue_depth": max_depth,
-        "saturation_factor": saturation,
         "stages": stages,
     }
+
+
+def run(
+    fast: bool = False,
+    d: int | None = None,
+    encoder: str = "uhd",
+    replicas: tuple[int, ...] = (1,),
+) -> dict:
+    d = d or (1024 if fast else 4096)
+    n_train = 512 if fast else 2048
+    n_calib = 96 if fast else 256
+    n_open = 384 if fast else 2048
+
+    ds = load_dataset("synth_mnist", n_train=n_train, n_test=256)
+    cfg = HDCConfig(
+        n_features=ds.n_features, n_classes=ds.n_classes, d=d, encoder=encoder
+    )
+    ckpt = tempfile.mkdtemp(prefix="hdc_transport_bench_")
+    HDCModel.create(cfg).fit(ds.train_images, ds.train_labels).save(ckpt, step=0)
+    images = np.asarray(ds.test_images, np.float32)
+
+    results: dict[int, dict] = {}
+    offered = None
+    for n_rep in replicas:
+        res = _bench_deployment(
+            encoder, ckpt, images, replicas=n_rep,
+            n_calib=n_calib, n_open=n_open, offered_rps=offered,
+        )
+        offered = res["offered_rps"]  # calibrated once, held fixed
+        results[n_rep] = res
+
+    table(
+        f"HTTP transport, open loop at {SATURATION:g}x the closed-loop rate "
+        f"(D={d}, {encoder}, {jax.default_backend()})",
+        ["replicas", "placement", "offered rps", "achieved rps", "shed rate",
+         "p50 ms", "p99 ms", "ok/shed/err"],
+        [
+            [str(n), r["placement"], f"{r['offered_rps']:.0f}",
+             f"{r['achieved_rps']:.0f}", f"{r['shed_rate']:.2f}",
+             f"{r['p50_ms']:.2f}", f"{r['p99_ms']:.2f}",
+             f"{r['n_ok']}/{r['n_shed']}/{r['n_errors']}"]
+            for n, r in results.items()
+        ],
+    )
+
+    # top-level keys describe the FIRST deployment (the historical
+    # single-engine artifact shape, so existing baselines keep applying);
+    # a sweep adds one sub-dict per fleet size under "replicas"
+    payload = {
+        "device": jax.default_backend(),
+        "d": d,
+        "encoder": encoder,
+        "saturation_factor": SATURATION,
+        **results[replicas[0]],
+    }
+    payload["img_per_s"] = payload["achieved_rps"]
+    if len(replicas) > 1:
+        payload["replicas"] = {str(n): r for n, r in results.items()}
     save_artifact("BENCH_transport", payload)
     return payload
+
+
+def _parse_replicas(text: str) -> tuple[int, ...]:
+    try:
+        counts = tuple(int(tok) for tok in text.split(",") if tok.strip())
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--replicas takes comma-separated ints, got {text!r}"
+        ) from None
+    if not counts or any(c < 1 for c in counts):
+        raise argparse.ArgumentTypeError(
+            f"--replicas counts must be >= 1, got {text!r}"
+        )
+    return counts
 
 
 def main() -> int:
@@ -190,8 +266,11 @@ def main() -> int:
     ap.add_argument("--d", type=int, default=None)
     ap.add_argument("--encoder", default="uhd",
                     help="served encoder (uhd | uhd_dynamic)")
+    ap.add_argument("--replicas", type=_parse_replicas, default=(1,),
+                    help="comma-separated fleet sizes to sweep under one "
+                         "fixed offered load, e.g. 1,4")
     args = ap.parse_args()
-    run(fast=args.fast, d=args.d, encoder=args.encoder)
+    run(fast=args.fast, d=args.d, encoder=args.encoder, replicas=args.replicas)
     return 0
 
 

@@ -8,6 +8,15 @@ background watcher promote it without a restart.
 
 To keep learning from labeled traffic after deployment (the DESIGN.md
 §10 feedback loop), see `examples/online_learning.py`.
+
+This example serves one engine on one device. To scale the same entry
+to a replica fleet — optionally sharding each replica's packed predict
+over a device mesh — pass ``replicas=N`` (and ``placement=``) to
+`register_checkpoint`, or try the driver on a forced multi-device CPU
+mesh (DESIGN.md §12):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve_http --smoke --replicas 4
 """
 
 import sys

@@ -38,6 +38,7 @@ from repro.core.registry import (
     EncoderBase,
     register_backend,
     register_encoder,
+    register_encode_slice,
     register_fit_bundle,
 )
 
@@ -263,6 +264,18 @@ def _uhd_dynamic_ref_fit_bundle(cfg, books, x_q, labels, *, d, point_offset):
     return kref.fit_bundle_dynamic(
         x_q, books["direction"], labels, cfg.n_classes, d, skip=skip
     )
+
+
+@register_encode_slice("uhd_dynamic", "ref")
+def _uhd_dynamic_ref_encode_slice(cfg, books, x_q, *, d, point_offset):
+    """Pure-JAX D-slice generation for sharded packed predict: each
+    shard Gray-codes only points [skip + offset, skip + offset + d).
+    `point_offset` may be traced (``jax.lax.axis_index`` under
+    shard_map) — the generator takes it as a runtime scalar.  The
+    Pallas encode kernel bakes `skip` into the kernel closure, so it
+    registers no slice path; "auto" dispatch lands here instead."""
+    skip = cfg.sobol_skip if point_offset is None else cfg.sobol_skip + point_offset
+    return encoding.uhd_encode_dynamic(x_q, books["direction"], d, skip=skip)
 
 
 @register_fit_bundle("uhd_dynamic", "pallas")

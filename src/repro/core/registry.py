@@ -46,6 +46,14 @@ BackendFn = Callable[..., jax.Array]  # (cfg, codebooks, x_q) -> (B, D) int32
 #: generated Sobol stream (may be traced — only generator-backed encoders
 #: consume it; table backends carry the offset in their sliced codebook).
 FitBundleFn = Callable[..., jax.Array]
+#: D-slice inference datapath of one backend (DESIGN.md §12):
+#: (cfg, codebooks, x_q, *, d, point_offset) -> (B, d) int32 hypervector
+#: slice, bit-identical to columns [point_offset, point_offset + d) of the
+#: full encode.  Only generator-backed encoders need one — table encoders
+#: see a pre-sliced codebook and their plain ``fn`` already yields the
+#: slice.  ``point_offset`` may be traced (``jax.lax.axis_index`` under
+#: ``shard_map``).
+EncodeSliceFn = Callable[..., jax.Array]
 AvailabilityProbe = Callable[[str], bool]  # platform -> usable?
 
 
@@ -76,6 +84,10 @@ class BackendSpec:
     #: without one fall back to encode-then-bundle_by_class in
     #: EncoderBase.fit_bundle — same class sums, one extra (B, D) pass.
     fit_bundle: FitBundleFn | None = None
+    #: Optional D-slice inference datapath (see EncodeSliceFn).  Needed
+    #: only by generator-backed encoders for sharded packed predict;
+    #: table backends serve slices through their pre-sliced codebooks.
+    encode_slice: EncodeSliceFn | None = None
 
 
 _ENCODERS: dict[str, "EncoderBase"] = {}
@@ -176,6 +188,51 @@ class EncoderBase:
         hvs = spec.fn(cfg, codebooks, x_q)
         return encoding.bundle_by_class(hvs, labels, cfg.n_classes)
 
+    def encode_slice(
+        self, cfg: "HDCConfig", codebooks: dict[str, jax.Array], x_q: jax.Array,
+        *, backend: str = "auto", d: int | None = None, point_offset=None,
+    ) -> jax.Array:
+        """Quantized features (B, H) -> hypervector D-slice (B, d).
+
+        The inference-side twin of :meth:`fit_bundle`'s sharding hooks:
+        under "model"-axis sharded serving every shard encodes only its
+        own D-slice.  Table encoders get their codebook pre-sliced by
+        ``HDCModel.shardings`` and their plain encode already yields the
+        slice; generator-backed encoders (``dynamic_generator=True``)
+        must re-aim the generator at ``point_offset``, which requires a
+        registered ``encode_slice`` datapath.  Bit-identical to columns
+        ``[point_offset, point_offset + d)`` of the full encode.
+        """
+        resolved = resolve_backend(backend, encoder=self.name)
+        spec = _BACKENDS[self.name][resolved]
+        needs_generator = point_offset is not None
+        if needs_generator and spec.encode_slice is None and backend in (None, "auto"):
+            # "auto" means "any correct datapath" — capability-probe the
+            # preference order for one that can re-aim the generator
+            # (e.g. the Pallas encode kernel bakes `skip` statically, so
+            # under shard_map only the pure-JAX path can take a traced
+            # offset).  An explicit backend name still fails loudly below.
+            platform = jax.default_backend()
+            order = self.auto_order.get(platform, self.auto_order["default"])
+            for cand in order:
+                cspec = _BACKENDS[self.name].get(cand)
+                if (cspec is not None and cspec.encode_slice is not None
+                        and cspec.available(platform)):
+                    spec = cspec
+                    break
+        if spec.encode_slice is not None:
+            return spec.encode_slice(
+                cfg, codebooks, x_q,
+                d=cfg.d if d is None else d, point_offset=point_offset,
+            )
+        if needs_generator:
+            raise BackendUnavailableError(
+                f"backend {spec.name!r} of encoder {self.name!r} registers no "
+                "encode_slice datapath; sharded generator D-slices "
+                "(point_offset) require one"
+            )
+        return spec.fn(cfg, codebooks, x_q)
+
     def backends(self) -> tuple[str, ...]:
         return tuple(sorted(_BACKENDS.get(self.name, {})))
 
@@ -235,6 +292,29 @@ def register_fit_bundle(
             )
         _BACKENDS[encoder][backend] = dataclasses.replace(
             table[backend], fit_bundle=fn
+        )
+        return fn
+
+    return deco
+
+
+def register_encode_slice(
+    encoder: str, backend: str
+) -> Callable[[EncodeSliceFn], EncodeSliceFn]:
+    """Function decorator: attach a D-slice inference datapath to an
+    already-registered backend (see EncodeSliceFn for the contract).
+    Like ``register_fit_bundle``, purely additive."""
+
+    def deco(fn: EncodeSliceFn) -> EncodeSliceFn:
+        table = _BACKENDS.get(encoder, {})
+        if backend not in table:
+            raise ValueError(
+                f"register_encode_slice({encoder!r}, {backend!r}): backend is "
+                f"not registered (have {sorted(table)}); register the encode "
+                "datapath first"
+            )
+        _BACKENDS[encoder][backend] = dataclasses.replace(
+            table[backend], encode_slice=fn
         )
         return fn
 

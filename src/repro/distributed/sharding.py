@@ -118,6 +118,24 @@ class ShardingRules:
         return NamedSharding(mesh, self.activation_spec(ndim, mesh))
 
 
+def model_mesh(
+    devices=None, *, rules: ShardingRules | None = None
+) -> Mesh:
+    """One-axis tensor-model mesh over explicit devices.
+
+    The serving-side mesh builder: a replica's device group becomes a
+    ``("model",)`` mesh whose axis `model_axis_for` then recognises, so
+    sharded packed predict and D-sharded training agree on partitioning
+    by construction.  ``devices=None`` takes every local device."""
+    import numpy as np
+
+    rules = rules or ShardingRules()
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if not devs:
+        raise ValueError("model_mesh: empty device list")
+    return Mesh(np.asarray(devs), (rules.model_axis,))
+
+
 def model_axis_for(
     mesh: Mesh, dim: int, *, rules: ShardingRules | None = None
 ) -> str | None:

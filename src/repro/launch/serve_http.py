@@ -25,6 +25,13 @@ required a manual `hot_reload()` call for.
   5. drain shutdown: server stops accepting and drains in-flight
      connections, then the registry stops watcher -> batcher -> engine.
 
+`--replicas N` (with optional `--placement`) deploys the entry as a
+replica fleet (DESIGN.md §12): the smoke then additionally asserts pool
+health/placement reporting, per-replica Prometheus series, and that the
+mid-traffic promotion swaps every replica atomically.  Pair with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise
+sharded replicas on a forced CPU mesh.
+
 Serving an existing checkpoint directory (watcher follows the trainer):
 
     PYTHONPATH=src python -m repro.launch.serve_http --ckpt /path/to/ckpt
@@ -70,6 +77,13 @@ def _stream_over_http(
     return out
 
 
+def _entry_snapshot(batcher) -> dict:
+    """Metrics snapshot for a registry entry: fleet-merged for a
+    `ReplicaPool`, the batcher's own for a single engine."""
+    merged = getattr(batcher, "merged_metrics", None)
+    return (merged() if merged is not None else batcher.metrics).snapshot()
+
+
 def run_smoke(args) -> int:
     ds = load_dataset(args.dataset, n_train=args.n_train, n_test=args.requests)
     cfg = HDCConfig(
@@ -89,9 +103,14 @@ def run_smoke(args) -> int:
     registry = ModelRegistry(trace_jsonl=args.trace_jsonl)
     batcher = registry.register_checkpoint(
         name, ckpt_dir, step=0, batch_size=args.batch, impl=args.impl,
+        placement=args.placement, replicas=args.replicas,
         max_depth=args.max_queue_depth, start=True,
     )
     engine0 = registry.engine(name)
+    entry_desc = registry.describe_entry(name)
+    print(f"placement: {entry_desc['placement']}"
+          + (f" x{entry_desc['n_replicas']} replicas"
+             if "n_replicas" in entry_desc else ""))
     watcher = ReloadWatcher(
         registry, name, interval_s=args.watch_interval,
         on_promote=lambda n, s: print(f"[watcher] promoted {n!r} to step {s}"),
@@ -137,14 +156,14 @@ def run_smoke(args) -> int:
     # every label must match the step-0 engine bit-for-bit, whichever
     # engine served it; the swap is visible only in /healthz (step) and
     # metrics (n_reloads).
-    n_before = batcher.metrics.snapshot()["n_requests"]
+    n_before = _entry_snapshot(batcher)["n_requests"]
     half = len(ds.test_images) // 2
     t_serve0 = time.perf_counter()
     with concurrent.futures.ThreadPoolExecutor(1) as stream_pool:
         stream_fut = stream_pool.submit(
             _stream_over_http, host, port, name, ds.test_images
         )
-        while (batcher.metrics.snapshot()["n_requests"] - n_before < half
+        while (_entry_snapshot(batcher)["n_requests"] - n_before < half
                and not stream_fut.done()):
             time.sleep(0.01)
 
@@ -180,6 +199,20 @@ def run_smoke(args) -> int:
     assert snap["n_reloads"] >= 1, snap
     assert health["step"] == 1 and health["watcher"]["n_promotions"] >= 1
 
+    if args.replicas > 1:
+        # the promotion was atomic over the whole fleet: every replica
+        # is at step 1, and the control plane reports the fleet shape
+        assert health["placement"] == "pool", health
+        assert [r["replica"] for r in health["replicas"]] == list(
+            range(args.replicas)
+        ), health
+        assert all(r["step"] == 1 for r in health["replicas"]), health
+        assert all(
+            r.engine.step == 1 for r in registry.batcher(name).replicas
+        )
+        print(f"fleet: all {args.replicas} replicas at step 1 after the "
+              "mid-traffic promotion (atomic swap) OK")
+
     # observability (DESIGN.md §11): every streamed request left a trace
     # whose four spans are disjoint sub-intervals of [submit, done] —
     # their sum can never exceed the end-to-end latency
@@ -195,6 +228,9 @@ def run_smoke(args) -> int:
     assert promo_events and promo_events[-1]["step"] == 1, promo_events
     assert "uhd_requests_total" in prom, prom[:200]
     assert "uhd_stage_latency_seconds_bucket" in prom, prom[:200]
+    if args.replicas > 1:
+        # pool entries break the uhd_* families out per replica
+        assert 'replica="pool"' in prom and 'replica="0"' in prom, prom[:400]
     print(f"traces: {len(req_traces)} request spans + {len(promo_events)} "
           "promotion events, span sums <= e2e: OK")
     print(f"prometheus exposition: {len(prom.splitlines())} lines OK")
@@ -225,8 +261,10 @@ def run_serve(args) -> int:
     registry = ModelRegistry(trace_jsonl=args.trace_jsonl)
     registry.register_checkpoint(
         args.name, args.ckpt, batch_size=args.batch, impl=args.impl,
+        placement=args.placement, replicas=args.replicas,
         max_depth=args.max_queue_depth, start=True,
     )
+    print(f"placement: {registry.describe_entry(args.name)['placement']}")
     watcher = ReloadWatcher(
         registry, args.name, interval_s=args.watch_interval,
         on_promote=lambda n, s: print(f"[watcher] promoted {n!r} to step {s}"),
@@ -273,6 +311,13 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--impl", default="auto",
                     help="packed similarity: auto | pallas | jnp")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the model name (a "
+                         "ReplicaPool with least-loaded dispatch)")
+    ap.add_argument("--placement", default="auto",
+                    help="execution placement per replica: auto | device "
+                         "| sharded (shard_map packed predict over the "
+                         "replica's device group)")
     ap.add_argument("--watch-interval", type=float, default=0.2,
                     help="reload watcher poll interval (seconds)")
     ap.add_argument("--max-queue-depth", type=int, default=1024,

@@ -44,7 +44,8 @@ _DEFAULT_BOUNDS = log_bounds()
 class LatencyHistogram:
     """Thread-safe fixed-bucket histogram over non-negative seconds."""
 
-    __slots__ = ("_bounds", "_counts", "_count", "_sum", "_min", "_max", "_lock")
+    __slots__ = ("_bounds", "_counts", "_count", "_sum", "_min", "_max",
+                 "_exemplars", "_lock")
 
     def __init__(self, bounds: tuple[float, ...] | None = None):
         bounds = _DEFAULT_BOUNDS if bounds is None else tuple(float(b) for b in bounds)
@@ -58,11 +59,14 @@ class LatencyHistogram:
         self._sum = 0.0
         self._min: float | None = None
         self._max: float | None = None
+        # bucket index -> id of the last observation that landed there
+        # (an exemplar: links a tail bucket to a concrete request trace)
+        self._exemplars: dict[int, str] = {}
         self._lock = threading.Lock()
 
     # -- writes ------------------------------------------------------------
 
-    def observe(self, seconds: float) -> None:
+    def observe(self, seconds: float, exemplar: str | None = None) -> None:
         v = max(0.0, float(seconds))
         i = bisect.bisect_left(self._bounds, v)
         with self._lock:
@@ -73,6 +77,8 @@ class LatencyHistogram:
                 self._min = v
             if self._max is None or v > self._max:
                 self._max = v
+            if exemplar is not None:
+                self._exemplars[i] = str(exemplar)
 
     # -- merge -------------------------------------------------------------
 
@@ -86,9 +92,11 @@ class LatencyHistogram:
             raise ValueError("cannot merge histograms with different bucket bounds")
         out = LatencyHistogram(self._bounds)
         with self._lock:
-            a = (list(self._counts), self._count, self._sum, self._min, self._max)
+            a = (list(self._counts), self._count, self._sum, self._min, self._max,
+                 dict(self._exemplars))
         with other._lock:
-            b = (list(other._counts), other._count, other._sum, other._min, other._max)
+            b = (list(other._counts), other._count, other._sum, other._min,
+                 other._max, dict(other._exemplars))
         out._counts = [x + y for x, y in zip(a[0], b[0])]
         out._count = a[1] + b[1]
         out._sum = a[2] + b[2]
@@ -96,6 +104,10 @@ class LatencyHistogram:
         maxs = [m for m in (a[4], b[4]) if m is not None]
         out._min = min(mins) if mins else None
         out._max = max(maxs) if maxs else None
+        # either stream's exemplar is a valid representative of the
+        # merged bucket; `other` wins ties (it is "the newer stream" in
+        # the fleet-merge call pattern pool.merge(replica))
+        out._exemplars = {**a[5], **b[5]}
         return out
 
     # -- reads -------------------------------------------------------------
@@ -164,6 +176,35 @@ class LatencyHistogram:
             out[f"p{p:g}_ms"] = None if v is None else v * 1e3
         return out
 
+    def tail_exemplars(self, p: float = 99.0, limit: int = 8) -> list[dict]:
+        """Exemplar ids of the tail: one entry per non-empty bucket at or
+        above the p-th-percentile bucket that has recorded an exemplar,
+        hottest last.  Each entry links a latency band to a concrete
+        request trace (`/v1/traces?id=`): ``{"le_ms": upper edge (None =
+        overflow), "count": bucket count, "trace_id": exemplar}``.
+        """
+        with self._lock:
+            counts = list(self._counts)
+            count = self._count
+            exemplars = dict(self._exemplars)
+        if count == 0 or not exemplars:
+            return []
+        target = min(max(math.ceil(p / 100.0 * count), 1), count)
+        cum, start = 0, len(counts) - 1
+        for i, c in enumerate(counts):
+            cum += c
+            if cum >= target:
+                start = i
+                break
+        out = []
+        for i in range(start, len(counts)):
+            if counts[i] and i in exemplars:
+                le = self._bounds[i] * 1e3 if i < len(self._bounds) else None
+                out.append(
+                    {"le_ms": le, "count": int(counts[i]), "trace_id": exemplars[i]}
+                )
+        return out[-limit:]
+
     def snapshot(self) -> dict:
         """Plain-JSON summary: exact count/total/mean, estimated
         percentiles; absent values are None, never NaN."""
@@ -178,4 +219,7 @@ class LatencyHistogram:
             "max_ms": None if vmax is None else vmax * 1e3,
         }
         out.update(self.percentiles_ms())
+        tail = self.tail_exemplars()
+        if tail:
+            out["tail_exemplars"] = tail
         return out

@@ -76,37 +76,56 @@ class _Writer:
         return "\n".join(out) + "\n"
 
 
+def _serving_families(w: _Writer, labels: dict, m) -> None:
+    """Emit the ``uhd_*`` serving families for one `ServingMetrics`
+    under the given label set.  A single-engine entry passes
+    ``{"model": name}`` (the historical label set, unchanged); a
+    replica-pool entry calls this once per replica with an added
+    ``replica="<i>"`` label plus once with ``replica="pool"`` for the
+    pool's own admission counters — `sum by (model)` recovers the
+    fleet totals exactly because histograms merge bucket-wise."""
+    counters = (
+        ("uhd_requests_total", m.n_requests, "requests completed"),
+        ("uhd_request_errors_total", m.n_errors, "requests failed"),
+        ("uhd_batches_total", m.n_batches, "device batches launched"),
+        ("uhd_slots_total", m.n_slots, "slots across launched batches"),
+        ("uhd_padded_slots_total", m.n_padded, "padded (empty) slots"),
+        ("uhd_shed_total", m.n_shed, "requests shed by admission control"),
+        ("uhd_rejected_total", m.n_rejected,
+         "requests rejected for non-load reasons"),
+        ("uhd_reloads_total", m.n_reloads, "hot engine swaps"),
+    )
+    for fam, value, help in counters:
+        w.sample(fam, labels, value, mtype="counter", help=help)
+    w.sample("uhd_queue_depth", labels, m.queue_depth,
+             help="requests currently queued")
+    w.sample("uhd_inflight", labels, m.inflight,
+             help="requests dequeued but not yet resolved")
+    w.histogram("uhd_request_latency_seconds", labels, m.latency,
+                help="end-to-end submit-to-resolve latency")
+    for stage, hist in m.stage.items():
+        w.histogram("uhd_stage_latency_seconds", {**labels, "stage": stage},
+                    hist, help="per-stage request latency")
+
+
 def render_prometheus(registry) -> str:
     """Text exposition for one `ModelRegistry` (serving + transport
-    admission + watcher + online learner, per model)."""
+    admission + watcher + online learner, per model; per replica for
+    pool entries)."""
     w = _Writer()
     for name in registry.names():
         try:
             batcher = registry.batcher(name)
         except KeyError:  # racing an unregister
             continue
-        m = batcher.metrics
         labels = {"model": name}
-        counters = (
-            ("uhd_requests_total", m.n_requests, "requests completed"),
-            ("uhd_request_errors_total", m.n_errors, "requests failed"),
-            ("uhd_batches_total", m.n_batches, "device batches launched"),
-            ("uhd_slots_total", m.n_slots, "slots across launched batches"),
-            ("uhd_padded_slots_total", m.n_padded, "padded (empty) slots"),
-            ("uhd_shed_total", m.n_shed, "requests shed by admission control"),
-            ("uhd_rejected_total", m.n_rejected,
-             "requests rejected for non-load reasons"),
-            ("uhd_reloads_total", m.n_reloads, "hot engine swaps"),
-        )
-        for fam, value, help in counters:
-            w.sample(fam, labels, value, mtype="counter", help=help)
-        w.sample("uhd_queue_depth", labels, m.queue_depth,
-                 help="requests currently queued")
-        w.histogram("uhd_request_latency_seconds", labels, m.latency,
-                    help="end-to-end submit-to-resolve latency")
-        for stage, hist in m.stage.items():
-            w.histogram("uhd_stage_latency_seconds", {**labels, "stage": stage},
-                        hist, help="per-stage request latency")
+        replicas = getattr(batcher, "replicas", None)
+        if replicas is not None:  # ReplicaPool: per-replica + admission
+            _serving_families(w, {**labels, "replica": "pool"}, batcher.metrics)
+            for i, r in enumerate(replicas):
+                _serving_families(w, {**labels, "replica": str(i)}, r.metrics)
+        else:
+            _serving_families(w, labels, batcher.metrics)
 
         watcher = registry.watcher(name)
         if watcher is not None:

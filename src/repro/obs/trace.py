@@ -52,7 +52,7 @@ class RequestTrace:
     """
 
     __slots__ = (
-        "request_id", "model", "owner", "step", "error",
+        "request_id", "model", "owner", "step", "replica", "error",
         "t_submit", "t_dequeue", "t_device_start", "t_device_end",
         "t_resolve", "t_write_start", "t_write_end", "_finalized",
     )
@@ -64,11 +64,13 @@ class RequestTrace:
         model: str | None = None,
         owner: str = OWNER_BATCHER,
         t_submit: float | None = None,
+        replica: int | None = None,
     ):
         self.request_id = request_id or new_request_id()
         self.model = model
         self.owner = owner
         self.step: int | None = None
+        self.replica = replica  # pool slot that served this request
         self.error = False
         self.t_submit = time.perf_counter() if t_submit is None else t_submit
         self.t_dequeue: float | None = None
@@ -100,6 +102,7 @@ class RequestTrace:
             "id": self.request_id,
             "model": self.model,
             "step": self.step,
+            "replica": self.replica,
             "error": bool(error or self.error),
             "ts": time.time(),
             "t_submit": t0,
@@ -206,9 +209,13 @@ class TraceBuffer:
         *,
         kind: str | None = None,
         model: str | None = None,
+        request_id: str | None = None,
     ) -> list[dict]:
         """Entries in append order (newest last), optionally filtered by
-        kind ("request"/"event") and model, truncated to the last n."""
+        kind ("request"/"event"), model, and exact request id (the
+        exemplar-lookup path: a tail bucket's ``trace_id`` resolves to
+        its concrete trace via ``/v1/traces?id=``), truncated to the
+        last n."""
         with self._lock:
             entries = sorted(
                 itertools.chain(self._requests, self._events),
@@ -218,6 +225,8 @@ class TraceBuffer:
             entries = [e for e in entries if e.get("kind") == kind]
         if model is not None:
             entries = [e for e in entries if e.get("model") == model]
+        if request_id is not None:
+            entries = [e for e in entries if e.get("id") == request_id]
         if n is not None and n >= 0:
             entries = entries[-n:]
         return entries

@@ -11,12 +11,26 @@ without dropping queued requests.
     batcher  = registry.register("uhd", engine.warmup(), start=True)
     label    = batcher.submit(image).result(timeout=1.0)
 
+Execution placement is a pluggable layer (DESIGN.md §12): an engine runs
+single-device or D-sharded under shard_map (`repro.serving.execution`),
+and a `ReplicaPool` fans one registry entry over N replicas with
+least-loaded dispatch:
+
+    pool = registry.register_checkpoint(
+        "uhd", "ckpt/", replicas=4, placement="auto", start=True)
+
 CLI drivers: ``python -m repro.launch.serve_hdc --smoke`` (in-process),
 ``python -m repro.launch.serve_http --smoke`` (over the network front-end
-in `repro.transport`, DESIGN.md §8).
+in `repro.transport`, DESIGN.md §8; ``--replicas N`` for a fleet).
 """
 
 from repro.serving.batcher import MicroBatcher, QueueFull, ServingFuture  # noqa: F401
 from repro.serving.engine import ServingEngine, resolve_impl  # noqa: F401
+from repro.serving.execution import (  # noqa: F401
+    DeviceExecution,
+    ShardedExecution,
+    plan_executions,
+)
 from repro.serving.metrics import ServingMetrics  # noqa: F401
+from repro.serving.pool import ReplicaPool  # noqa: F401
 from repro.serving.registry import ModelRegistry  # noqa: F401

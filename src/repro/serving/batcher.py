@@ -17,6 +17,14 @@ Unlike the transformer server there is no multi-step decode state, so
 step is a fresh batch and slot refill is just taking the next requests
 off the queue.
 
+The FIFO is **block-granular** (PR 8): `submit_block` enqueues its
+requests as one unit and `_take_batch` only takes whole blocks (it
+splits a block solely when the block alone exceeds the batch size).  A
+response batch admitted together is therefore served by ONE device step
+— and, since the engine reference is read once per step, by one engine
+generation: a hot reload landing mid-stream can never mix model steps
+within one response block.
+
 The engine reference is read once per drain step under the lock —
 :meth:`swap_engine` (the hot-reload path) therefore never drops queued
 requests: whatever is still in the FIFO is simply served by the new
@@ -117,6 +125,7 @@ class MicroBatcher:
         metrics: ServingMetrics | None = None,
         name: str | None = None,
         traces: TraceBuffer | None = None,
+        replica: int | None = None,
     ):
         self.engine = engine
         self.max_delay_s = max_delay_ms / 1e3
@@ -124,9 +133,13 @@ class MicroBatcher:
         self.metrics = metrics or ServingMetrics()
         self.name = name  # model label stamped onto traces
         self.traces = traces  # shared ring; None disables tracing
-        self._queue: collections.deque[tuple[np.ndarray, ServingFuture]] = (
+        self.replica = replica  # pool slot index stamped onto traces
+        # block-granular FIFO: each entry is the [(img, fut), ...] of one
+        # admission (see module docstring); _n_queued tracks requests
+        self._queue: collections.deque[list[tuple[np.ndarray, ServingFuture]]] = (
             collections.deque()
         )
+        self._n_queued = 0
         self._cv = threading.Condition()
         self._thread: threading.Thread | None = None
         self._running = False
@@ -147,6 +160,7 @@ class MicroBatcher:
                 model=self.name,
                 owner=trace_owner,
                 t_submit=fut.t_submit,
+                replica=self.replica,
             )
         return fut
 
@@ -173,13 +187,14 @@ class MicroBatcher:
             if self._closed:
                 self.metrics.rejected()
                 raise RuntimeError("batcher is stopped; request rejected")
-            if self.max_depth is not None and len(self._queue) >= self.max_depth:
+            if self.max_depth is not None and self._n_queued >= self.max_depth:
                 self.metrics.shed()
                 raise QueueFull(
-                    f"queue depth {len(self._queue)} at max_depth "
+                    f"queue depth {self._n_queued} at max_depth "
                     f"{self.max_depth}; request shed"
                 )
-            self._queue.append((image, fut))
+            self._queue.append([(image, fut)])
+            self._n_queued += 1
             self.metrics.enqueued()
             self._cv.notify_all()
         return fut
@@ -212,11 +227,11 @@ class MicroBatcher:
                 raise RuntimeError("batcher is stopped; request rejected")
             if (
                 self.max_depth is not None
-                and len(self._queue) + len(images) > self.max_depth
+                and self._n_queued + len(images) > self.max_depth
             ):
                 self.metrics.shed(len(images))
                 raise QueueFull(
-                    f"queue depth {len(self._queue)} + {len(images)} exceeds "
+                    f"queue depth {self._n_queued} + {len(images)} exceeds "
                     f"max_depth {self.max_depth}; batch shed"
                 )
             futures = [
@@ -226,8 +241,10 @@ class MicroBatcher:
                 )
                 for i in range(len(images))
             ]
-            for img, fut in zip(images, futures):
-                self._queue.append((img, fut))
+            # one block: the whole response batch is served by one device
+            # step on one engine generation (see module docstring)
+            self._queue.append(list(zip(images, futures)))
+            self._n_queued += len(images)
             self.metrics.enqueued(len(images))
             self._cv.notify_all()
         return futures
@@ -242,16 +259,34 @@ class MicroBatcher:
 
     def queue_depth(self) -> int:
         with self._cv:
-            return len(self._queue)
+            return self._n_queued
 
     # -- draining ----------------------------------------------------------
 
     def _take_batch(self) -> tuple[ServingEngine, list[tuple[np.ndarray, ServingFuture]]]:
         """Pop up to batch_size requests + the engine to serve them with.
-        Caller must hold the lock; returns an empty list if idle."""
+        Caller must hold the lock; returns an empty list if idle.
+
+        Takes whole blocks only: a block that would not fit next to the
+        requests already taken waits for the next step.  The single
+        exception is a block larger than the batch itself, which is
+        split at the front of an empty batch (unavoidable — callers who
+        need the one-step guarantee keep blocks <= batch_size)."""
         engine = self.engine
-        n = min(len(self._queue), engine.batch_size)
-        taken = [self._queue.popleft() for _ in range(n)]
+        slots = engine.batch_size
+        taken: list[tuple[np.ndarray, ServingFuture]] = []
+        while self._queue and len(taken) < slots:
+            block = self._queue[0]
+            if len(taken) + len(block) <= slots:
+                self._queue.popleft()
+                taken.extend(block)
+            elif not taken:
+                taken.extend(block[:slots])
+                self._queue[0] = block[slots:]
+                break
+            else:
+                break
+        self._n_queued -= len(taken)
         if taken:
             t_dequeue = time.perf_counter()
             for _, fut in taken:
@@ -293,7 +328,10 @@ class MicroBatcher:
             if fut.trace is not None:
                 fut.trace.t_device_end = t_device_end
             fut.t_done = time.perf_counter()
-            self.metrics.observe_request(fut.latency_s())
+            self.metrics.observe_request(
+                fut.latency_s(),
+                exemplar=fut.trace.request_id if fut.trace is not None else None,
+            )
             self._finish_request(fut)
             fut._resolve(int(labels[i]))
 
@@ -351,7 +389,7 @@ class MicroBatcher:
                 deadline = time.perf_counter() + self.max_delay_s
                 while (
                     self._running
-                    and len(self._queue) < self.engine.batch_size
+                    and self._n_queued < self.engine.batch_size
                 ):
                     remaining = deadline - time.perf_counter()
                     if remaining <= 0:
@@ -388,8 +426,9 @@ class MicroBatcher:
             self._closed = True
             thread, self._thread = self._thread, None
             if not drain:
-                pending = list(self._queue)
+                pending = [pair for block in self._queue for pair in block]
                 self._queue.clear()
+                self._n_queued = 0
                 self.metrics.dropped(len(pending))
                 for _, fut in pending:
                     fut._resolve(None, RuntimeError("server stopped"))

@@ -5,22 +5,27 @@ are binarized, classification is XOR + popcount over uint32 words.  The
 engine does all the expensive work exactly once at load time —
 
   * restore an `HDCModel` from a checkpoint step,
-  * binarize + bit-pack the (C, D) class sums into (C, D/32) uint32
-    words (`HDCModel.pack`),
+  * place it per its execution backend (single device, or D-sharded
+    over a ``("model",)`` mesh — see :mod:`repro.serving.execution`),
+  * binarize + bit-pack the (C, D) class sums into uint32 words in the
+    backend's own layout,
 
 — and after that every request batch runs one jitted
-``encode -> pack -> XOR+popcount -> argmax`` call
-(:func:`repro.core.hdc_model.predict_packed`).  The similarity
-implementation is picked per platform: the fused Pallas kernel natively
-on TPU, the pure-JAX packed path elsewhere (interpret-mode Pallas is
-correct but orders of magnitude slower than XLA on CPU).  Both are
-bit-exact, and tests pin the engine's labels to
+``encode -> pack -> XOR+popcount -> argmax`` call.  *Where* that call
+runs is the execution backend's business: the engine itself is
+placement-agnostic — PR 8 split the old baked-in single-device
+assumption into the pluggable :class:`~repro.serving.execution`
+layer, so the same engine fronts one chip or a D-sharded device group
+bit-identically.  The similarity implementation is picked per platform:
+the fused Pallas kernel natively on TPU, the pure-JAX packed path
+elsewhere.  Both are bit-exact, and tests pin the engine's labels to
 ``HDCModel.predict`` with ``similarity="hamming"`` for every registered
-uHD backend.
+uHD backend — including under sharding.
 
 Engines are immutable once built — hot reload (`repro.serving.registry`)
 builds a fresh engine from a newer step and swaps the reference, so an
-in-flight batch on the old engine is never disturbed.
+in-flight batch on the old engine is never disturbed.  The execution
+backend is reused across reloads: placement survives promotion.
 """
 
 from __future__ import annotations
@@ -32,22 +37,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import hdc_model
 from repro.core.hdc_model import HDCModel
+from repro.serving.execution import DeviceExecution, resolve_impl
 
-
-def resolve_impl(impl: str = "auto", platform: str | None = None) -> str:
-    """Packed-similarity implementation for this platform.
-
-    "auto" -> "pallas" on TPU (native kernel), "jnp" elsewhere.
-    Explicit names are honoured exactly (ValueError on unknown).
-    """
-    if impl == "auto":
-        platform = platform or jax.default_backend()
-        return "pallas" if platform == "tpu" else "jnp"
-    if impl not in ("pallas", "jnp"):
-        raise ValueError(f"unknown packed-similarity impl {impl!r}")
-    return impl
+__all__ = ["ServingEngine", "resolve_impl"]
 
 
 class ServingEngine:
@@ -61,15 +54,18 @@ class ServingEngine:
         impl: str = "auto",
         step: int | None = None,
         source: str | Path | None = None,
+        execution=None,
     ):
-        self.model = model
+        self.execution = execution if execution is not None else DeviceExecution(impl=impl)
+        self.model = self.execution.place(model)
         self.batch_size = int(batch_size)
-        self.impl = resolve_impl(impl)
+        self.impl = self.execution.impl
         self.step = step
         self.source = Path(source) if source is not None else None
-        # pack ONCE at load: (C, D/32) uint32 — per-request work never
-        # touches the int32 class sums again
-        self.class_words = jax.block_until_ready(model.pack())
+        # pack ONCE at load: uint32 class words in the execution
+        # backend's layout — per-request work never touches the int32
+        # class sums again
+        self.class_words = jax.block_until_ready(self.execution.pack(self.model))
 
     @classmethod
     def from_checkpoint(
@@ -79,10 +75,12 @@ class ServingEngine:
         step: int | None = None,
         batch_size: int = 64,
         impl: str = "auto",
+        execution=None,
     ) -> "ServingEngine":
         """Load a checkpointed `HDCModel` (latest step by default) and
         pack it for serving.  `step` pins an exact step — the hot-reload
-        path uses this to load the step it decided to promote."""
+        path uses this to load the step it decided to promote; it also
+        passes the old engine's `execution` so placement survives."""
         from repro.checkpoint.manager import CheckpointManager
 
         if step is None:
@@ -90,7 +88,10 @@ class ServingEngine:
             if step is None:
                 raise FileNotFoundError(f"no checkpoints under {path}")
         model = HDCModel.load(path, step=step)
-        return cls(model, batch_size=batch_size, impl=impl, step=step, source=path)
+        return cls(
+            model, batch_size=batch_size, impl=impl, step=step, source=path,
+            execution=execution,
+        )
 
     # -- inference --------------------------------------------------------
 
@@ -101,18 +102,14 @@ class ServingEngine:
         always sends `batch_size` rows so steady-state traffic compiles
         exactly once.
         """
-        labels = hdc_model.predict_packed(
-            self.model, jnp.asarray(images), self.class_words, impl=self.impl
-        )
+        labels = self.execution.predict(self.model, self.class_words, images)
         return np.asarray(labels)
 
     def warmup(self) -> "ServingEngine":
         """Compile the static-shape serving path before taking traffic."""
         dummy = jnp.zeros((self.batch_size, self.model.cfg.n_features), jnp.float32)
         jax.block_until_ready(
-            hdc_model.predict_packed(
-                self.model, dummy, self.class_words, impl=self.impl
-            )
+            self.execution.predict(self.model, self.class_words, dummy)
         )
         return self
 
@@ -123,6 +120,8 @@ class ServingEngine:
             "d": cfg.d,
             "n_classes": cfg.n_classes,
             "impl": self.impl,
+            "placement": self.execution.placement,
+            "execution": self.execution.describe(),
             "batch_size": self.batch_size,
             "step": self.step,
             "source": str(self.source) if self.source else None,

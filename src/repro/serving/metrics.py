@@ -44,6 +44,9 @@ class ServingMetrics:
         self.n_shed = 0  # admission-rejected under overload (HTTP 429)
         self.n_rejected = 0  # rejected for non-load reasons (stopped batcher)
         self.queue_depth = 0  # requests currently waiting (gauge)
+        self.inflight = 0  # requests taken off the queue, not yet resolved
+        # (gauge; queue_depth + inflight is the work ahead of a new
+        # arrival — the replica pool's least-loaded dispatch signal)
 
     # -- mutators (called from batcher/registry/transport threads) --------
 
@@ -62,18 +65,22 @@ class ServingMetrics:
             self.n_slots += n_slots
             self.n_padded += n_slots - n_real
             self.queue_depth = max(0, self.queue_depth - n_real)
+            self.inflight += n_real
 
-    def observe_request(self, latency_s: float, *, error: bool = False) -> None:
+    def observe_request(
+        self, latency_s: float, *, error: bool = False, exemplar: str | None = None
+    ) -> None:
         with self._lock:
             now = time.perf_counter()
             if self._t_first is None:
                 self._t_first = now
             self._t_last = now
             self.n_requests += 1
+            self.inflight = max(0, self.inflight - 1)
             if error:
                 self.n_errors += 1
         if not error:
-            self.latency.observe(latency_s)
+            self.latency.observe(latency_s, exemplar=exemplar)
 
     def observe_stage(self, stage: str, seconds: float) -> None:
         """Record one request's time inside a single pipeline stage."""
@@ -110,7 +117,7 @@ class ServingMetrics:
             b = other._counter_state()
         for key in (
             "n_requests", "n_batches", "n_slots", "n_padded", "n_errors",
-            "n_reloads", "n_shed", "n_rejected", "queue_depth",
+            "n_reloads", "n_shed", "n_rejected", "queue_depth", "inflight",
         ):
             setattr(out, key, a[key] + b[key])
         out._t0 = min(a["_t0"], b["_t0"])
@@ -135,7 +142,8 @@ class ServingMetrics:
             "n_slots": self.n_slots, "n_padded": self.n_padded,
             "n_errors": self.n_errors, "n_reloads": self.n_reloads,
             "n_shed": self.n_shed, "n_rejected": self.n_rejected,
-            "queue_depth": self.queue_depth, "_t0": self._t0,
+            "queue_depth": self.queue_depth, "inflight": self.inflight,
+            "_t0": self._t0,
             "_t_first": self._t_first, "_t_last": self._t_last,
         }
 
@@ -175,6 +183,7 @@ class ServingMetrics:
                 "n_shed": int(self.n_shed),
                 "n_rejected": int(self.n_rejected),
                 "queue_depth": int(self.queue_depth),
+                "inflight": int(self.inflight),
                 "batch_occupancy": (
                     (self.n_slots - self.n_padded) / self.n_slots
                     if self.n_slots

@@ -27,6 +27,7 @@ from pathlib import Path
 from repro.obs.trace import TraceBuffer
 from repro.serving.batcher import MicroBatcher, ServingFuture
 from repro.serving.engine import ServingEngine
+from repro.serving.pool import ReplicaPool
 
 
 class ModelRegistry:
@@ -52,7 +53,10 @@ class ModelRegistry:
         trace_jsonl_sample: int = 1,
     ):
         self._lock = threading.RLock()
-        self._entries: dict[str, MicroBatcher] = {}
+        # a "batcher" entry is a MicroBatcher or a ReplicaPool — the
+        # registry/transport/watcher code paths are duck-typed over the
+        # shared facade (submit/submit_block/queue_depth/metrics/engine)
+        self._entries: dict[str, MicroBatcher | ReplicaPool] = {}
         self._watchers: dict[str, object] = {}  # name -> ReloadWatcher-like
         self._learners: dict[str, object] = {}  # name -> OnlineLearner-like
         self.traces = TraceBuffer(
@@ -85,6 +89,28 @@ class ModelRegistry:
             batcher.start()
         return batcher
 
+    def register_pool(
+        self,
+        name: str,
+        engines: list[ServingEngine],
+        *,
+        max_delay_ms: float = 2.0,
+        max_depth: int | None = None,
+        start: bool = False,
+    ) -> ReplicaPool:
+        """Put a replica fleet behind one name; returns its pool."""
+        with self._lock:
+            if name in self._entries:
+                raise ValueError(f"model {name!r} already registered")
+            pool = ReplicaPool(
+                engines, max_delay_ms=max_delay_ms, max_depth=max_depth,
+                name=name, traces=self.traces,
+            )
+            self._entries[name] = pool
+        if start:
+            pool.start()
+        return pool
+
     def register_checkpoint(
         self,
         name: str,
@@ -93,16 +119,50 @@ class ModelRegistry:
         step: int | None = None,
         batch_size: int = 64,
         impl: str = "auto",
+        placement: str = "auto",
+        replicas: int = 1,
+        devices=None,
         max_delay_ms: float = 2.0,
         max_depth: int | None = None,
         start: bool = False,
-    ) -> MicroBatcher:
-        """Load-and-register in one call (the common server boot path)."""
-        engine = ServingEngine.from_checkpoint(
-            path, step=step, batch_size=batch_size, impl=impl
-        ).warmup()
-        return self.register(
-            name, engine, max_delay_ms=max_delay_ms, max_depth=max_depth,
+    ) -> MicroBatcher | ReplicaPool:
+        """Load-and-register in one call (the common server boot path).
+
+        ``replicas``/``placement``/``devices`` plan the fleet via
+        `repro.serving.execution.plan_executions`: the default (one
+        replica, auto placement) is the classic single-engine entry;
+        anything bigger loads the checkpoint once, builds one warmed
+        engine per planned execution backend, and registers a
+        :class:`ReplicaPool`.  A single replica with explicit placement
+        (e.g. ``"sharded"`` over the whole mesh) stays a plain
+        MicroBatcher around one engine."""
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.hdc_model import HDCModel
+        from repro.serving.execution import plan_executions
+
+        if step is None:
+            step = CheckpointManager(path).latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {path}")
+        model = HDCModel.load(path, step=step)
+        executions = plan_executions(
+            model.cfg.d, replicas=replicas, placement=placement, impl=impl,
+            devices=devices,
+        )
+        engines = [
+            ServingEngine(
+                model, batch_size=batch_size, step=step, source=path,
+                execution=execution,
+            ).warmup()
+            for execution in executions
+        ]
+        if len(engines) == 1:
+            return self.register(
+                name, engines[0], max_delay_ms=max_delay_ms,
+                max_depth=max_depth, start=start,
+            )
+        return self.register_pool(
+            name, engines, max_delay_ms=max_delay_ms, max_depth=max_depth,
             start=start,
         )
 
@@ -197,7 +257,7 @@ class ModelRegistry:
     def engine(self, name: str) -> ServingEngine:
         return self.batcher(name).engine
 
-    def batcher(self, name: str) -> MicroBatcher:
+    def batcher(self, name: str) -> MicroBatcher | ReplicaPool:
         with self._lock:
             try:
                 return self._entries[name]
@@ -210,8 +270,18 @@ class ModelRegistry:
         """Queue one request against a named model."""
         return self.batcher(name).submit(image)
 
+    def describe_entry(self, name: str) -> dict:
+        """Entry description: a pool describes the fleet (placement
+        "pool", per-replica engine details); a single engine describes
+        itself (placement "device"/"sharded")."""
+        batcher = self.batcher(name)
+        describe = getattr(batcher, "describe", None)
+        if describe is not None:
+            return describe()
+        return batcher.engine.describe()
+
     def describe(self) -> dict[str, dict]:
-        return {name: self.engine(name).describe() for name in self.names()}
+        return {name: self.describe_entry(name) for name in self.names()}
 
     # -- hot reload --------------------------------------------------------
 
@@ -219,7 +289,12 @@ class ModelRegistry:
         """Swap `name` to a newer checkpoint step without dropping queued
         requests.  Returns the step swapped to, or None if the entry is
         already at the newest published step.  `step` forces an exact
-        step (including rollback to an older one)."""
+        step (including rollback to an older one).
+
+        A pool entry promotes through `ReplicaPool.reload_to`: the
+        checkpoint loads once, every replica gets a warmed engine on its
+        existing execution backend, and all replicas swap inside one
+        pool-lock hold — promotion is atomic per entry."""
         batcher = self.batcher(name)
         old = batcher.engine
         if old.source is None:
@@ -233,8 +308,12 @@ class ModelRegistry:
             step = CheckpointManager(old.source).poll_latest(after=old.step)
             if step is None:
                 return None
+        reload_to = getattr(batcher, "reload_to", None)
+        if reload_to is not None:
+            return reload_to(step)
         engine = ServingEngine.from_checkpoint(
-            old.source, step=step, batch_size=old.batch_size, impl=old.impl
+            old.source, step=step, batch_size=old.batch_size, impl=old.impl,
+            execution=old.execution,  # placement survives promotion
         ).warmup()  # jit-cache hit: same static shapes as the old engine
         batcher.swap_engine(engine)
         return step

@@ -134,13 +134,18 @@ class HdcClient:
         n: int | None = None,
         kind: str | None = None,
         model: str | None = None,
+        request_id: str | None = None,
     ) -> list[dict]:
         """Last-n entries from the server's trace ring: request span
         dicts (kind="request") interleaved with lifecycle events
-        (kind="event" — watcher promotions, learner publishes)."""
+        (kind="event" — watcher promotions, learner publishes).
+        ``request_id`` looks up one exact trace — the target of a
+        tail-latency exemplar from the metrics snapshot."""
         params = {
             k: v
-            for k, v in (("n", n), ("kind", kind), ("model", model))
+            for k, v in (
+                ("n", n), ("kind", kind), ("model", model), ("id", request_id),
+            )
             if v is not None
         }
         path = protocol.ROUTE_TRACES

@@ -19,14 +19,19 @@ Routes (DESIGN.md §8, §10):
     and enqueued into the learner's bounded `FeedbackBuffer` — a full
     buffer sheds the whole block with a 429, *never* blocking the
     predict path on training.
-  * ``GET /healthz`` — liveness + per-model step/queue-depth/watcher.
-  * ``GET /v1/models`` — `ServingEngine.describe()` per model
-    (including ``codebook_bytes``, the uHD deployment headline).
+  * ``GET /healthz`` — liveness + per-model step/placement/queue-depth/
+    watcher; pool entries add per-replica step/depth/inflight.
+  * ``GET /v1/models`` — entry description per model: engine
+    `describe()` (including ``codebook_bytes``, the uHD deployment
+    headline) plus placement, and the per-replica fleet for pools.
   * ``GET /metrics`` — `ServingMetrics.snapshot()` per model as strict
-    JSON by default; ``Accept: text/plain`` negotiates Prometheus text
-    exposition instead (``uhd_*`` families, DESIGN.md §11).
+    JSON by default (fleet-merged for pool entries); ``Accept:
+    text/plain`` negotiates Prometheus text exposition instead
+    (``uhd_*`` families, with a ``replica`` label for pools,
+    DESIGN.md §11-§12).
   * ``GET /v1/traces`` — last-n per-request spans + lifecycle events
-    from the shared trace ring (``?n=&kind=&model=`` filters).
+    from the shared trace ring (``?n=&kind=&model=&id=`` filters;
+    ``id`` resolves a tail-latency exemplar to its full trace).
   * ``POST /v1/debug/profile?ms=N`` — opt-in ``jax.profiler`` capture
     window; 403 unless the server was started with
     ``enable_profiling=True``.
@@ -359,7 +364,10 @@ class HdcHttpServer:
         models = {}
         for name in self.registry.names():
             try:
-                models[name] = self.registry.engine(name).describe()
+                # entry-level description: a pool reports its fleet
+                # (placement "pool" + per-replica engine details), a
+                # single engine reports itself
+                models[name] = self.registry.describe_entry(name)
             except KeyError:  # racing an unregister
                 continue
         return _Response.json(HTTPStatus.OK, {"models": models})
@@ -374,12 +382,27 @@ class HdcHttpServer:
                 continue
             watcher = self.registry.watcher(name)
             learner = self.registry.learner(name)
-            models[name] = {
+            entry = {
                 "step": engine.step,
+                "placement": getattr(
+                    batcher, "placement", engine.execution.placement
+                ),
                 "queue_depth": batcher.queue_depth(),
                 "watcher": None if watcher is None else watcher.describe(),
                 "learner": None if learner is None else learner.describe(),
             }
+            replicas = getattr(batcher, "replicas", None)
+            if replicas is not None:  # ReplicaPool: per-replica liveness
+                entry["replicas"] = [
+                    {
+                        "replica": i,
+                        "step": r.engine.step,
+                        "queue_depth": r.queue_depth(),
+                        "inflight": r.metrics.inflight,
+                    }
+                    for i, r in enumerate(replicas)
+                ]
+            models[name] = entry
         return _Response.json(HTTPStatus.OK, {"status": "ok", "models": models})
 
     def _metrics(self, request: _Request) -> _Response:
@@ -395,9 +418,14 @@ class HdcHttpServer:
         out = {}
         for name in self.registry.names():
             try:
-                snap = self.registry.batcher(name).metrics.snapshot()
+                batcher = self.registry.batcher(name)
             except KeyError:
                 continue
+            # a pool answers with the fleet-merged view (pool admission
+            # counters + every replica's histograms, merged exactly);
+            # the Prometheus form keeps the per-replica breakdown
+            merged = getattr(batcher, "merged_metrics", None)
+            snap = (merged() if merged is not None else batcher.metrics).snapshot()
             learner = self.registry.learner(name)
             if learner is not None:
                 snap["online"] = learner.snapshot()
@@ -406,7 +434,9 @@ class HdcHttpServer:
 
     def _traces(self, request: _Request) -> _Response:
         """Last-n view of the shared trace ring, optionally filtered:
-        ``GET /v1/traces?n=100&kind=request&model=mnist``."""
+        ``GET /v1/traces?n=100&kind=request&model=mnist``;
+        ``?id=<request_id>`` resolves one exact trace (the target of a
+        tail-latency exemplar from `/metrics`)."""
         traces = getattr(self.registry, "traces", None)
         if traces is None:
             return _Response.json(HTTPStatus.OK, {"traces": []})
@@ -423,7 +453,12 @@ class HdcHttpServer:
                 HTTPStatus.BAD_REQUEST,
                 f'kind must be "request" or "event", got {kind!r}',
             )
-        entries = traces.snapshot(n, kind=kind, model=request.query.get("model"))
+        entries = traces.snapshot(
+            n,
+            kind=kind,
+            model=request.query.get("model"),
+            request_id=request.query.get("id"),
+        )
         return _Response.json(HTTPStatus.OK, {"traces": entries})
 
     async def _profile(self, request: _Request) -> _Response:

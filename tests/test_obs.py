@@ -564,7 +564,11 @@ def test_check_regression_update_baseline_roundtrip(tmp_path):
             "bytes_ratio_min": 256.0,
             "per_levels": {"16": {"dynamic_img_per_s": 1000.0}},
         }},
-        "BENCH_transport": {"achieved_rps": 800.0, "p99_ms": 20.0},
+        "BENCH_transport": {
+            "achieved_rps": 800.0, "p99_ms": 20.0,
+            "replicas": {"4": {"achieved_rps": 2800.0, "p99_ms": 18.0,
+                               "shed_rate": 0.05}},
+        },
         "BENCH_online": {"ingest_eps": 5000.0, "publish_to_promote_ms": 50.0,
                          "predict_p99_ms_active": 30.0},
     }

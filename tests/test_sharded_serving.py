@@ -1,0 +1,580 @@
+"""PR 8 sharded serving: execution backends, replica pool, fleet obs.
+
+The acceptance contract (ISSUE 8): sharded packed predict is
+bit-identical to the single-device engine for both `uhd` and
+`uhd_dynamic` — including on a forced 8-device host mesh where the
+per-shard slice is not word-aligned (D % (32 * n_shards) != 0) — and a
+mid-traffic watcher promotion swaps every pool replica atomically,
+never mixing model steps within one response block.
+"""
+
+import subprocess
+import sys
+import textwrap
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HDCConfig, HDCModel
+from repro.obs.histogram import LatencyHistogram
+from repro.obs.prometheus import render_prometheus
+from repro.obs.trace import TraceBuffer
+from repro.serving import (
+    DeviceExecution,
+    MicroBatcher,
+    ModelRegistry,
+    QueueFull,
+    ReplicaPool,
+    ServingEngine,
+    ShardedExecution,
+    plan_executions,
+    resolve_impl,
+)
+from repro.transport import HdcClient, HdcHttpServer, ReloadWatcher
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+RNG = np.random.default_rng(8)
+
+
+def _cfg(**kw):
+    base = dict(n_features=24, n_classes=4, d=128, levels=16,
+                similarity="hamming")
+    base.update(kw)
+    return HDCConfig(**base)
+
+
+def _trained(cfg, n=32):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return HDCModel.create(cfg).fit(x, y)
+
+
+def _queries(cfg, n=12):
+    return np.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# resolve_impl: platform validated even when the impl is pinned
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_impl_validates_platform_with_explicit_impl():
+    """The PR 8 bugfix: a typo'd platform used to slip through whenever
+    an explicit impl short-circuited the auto branch."""
+    with pytest.raises(ValueError, match="unknown platform 'xpu'"):
+        resolve_impl("jnp", "xpu")
+    with pytest.raises(ValueError, match="cpu, gpu, tpu"):
+        resolve_impl("pallas", "cuda")
+    # valid combinations still resolve exactly
+    assert resolve_impl("pallas", "cpu") == "pallas"
+    assert resolve_impl("jnp", "tpu") == "jnp"
+
+
+def test_resolve_impl_errors_list_valid_choices():
+    with pytest.raises(ValueError, match="valid: auto, jnp, pallas"):
+        resolve_impl("cuda")
+    with pytest.raises(ValueError, match="valid: cpu, gpu, tpu"):
+        resolve_impl("auto", "mps")
+
+
+# ---------------------------------------------------------------------------
+# plan_executions: fleet planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_executions_validates_placement_and_replicas():
+    with pytest.raises(ValueError, match="valid: auto, device, sharded"):
+        plan_executions(128, placement="mesh")
+    with pytest.raises(ValueError, match="replicas must be >= 1"):
+        plan_executions(128, replicas=0)
+
+
+def test_plan_executions_default_is_classic_unpinned_engine():
+    (ex,) = plan_executions(128)
+    assert isinstance(ex, DeviceExecution) and ex.device is None
+
+
+def test_plan_executions_device_placement_round_robins():
+    execs = plan_executions(128, replicas=3, placement="device")
+    assert len(execs) == 3
+    devs = jax.devices()
+    for i, ex in enumerate(execs):
+        assert isinstance(ex, DeviceExecution)
+        assert ex.device == devs[i % len(devs)]
+
+
+def test_plan_executions_sharded_refuses_non_dividing_d():
+    dev = jax.devices()[0]
+    # the divisibility check fires on the group size before any mesh is
+    # built, so a synthetic 2-entry device list is enough on 1-device CI
+    with pytest.raises(ValueError, match="does not divide"):
+        plan_executions(129, placement="sharded", devices=[dev, dev])
+
+
+def test_sharded_execution_rejects_mesh_and_devices():
+    with pytest.raises(ValueError, match="mesh or devices, not both"):
+        ShardedExecution(
+            mesh="not-a-mesh", devices=[jax.devices()[0]]  # validated first
+        )
+
+
+# ---------------------------------------------------------------------------
+# sharded bit-identity (in-process, 1-device mesh)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("encoder", ["uhd", "uhd_dynamic"])
+def test_sharded_engine_bit_identical_single_device(encoder):
+    """A 1-shard mesh exercises the whole shard_map datapath (slice
+    encode, local pack, psum) and must reproduce the single-device
+    labels exactly."""
+    cfg = _cfg(encoder=encoder, d=96, sobol_skip=3)
+    model = _trained(cfg)
+    q = _queries(cfg)
+    plain = ServingEngine(model, batch_size=12)
+    sharded = ServingEngine(
+        model, batch_size=12,
+        execution=ShardedExecution(devices=[jax.devices()[0]]),
+    )
+    expect = np.asarray(model.predict(q))
+    np.testing.assert_array_equal(np.asarray(plain.predict(q)), expect)
+    np.testing.assert_array_equal(np.asarray(sharded.predict(q)), expect)
+
+    desc = sharded.describe()
+    assert desc["placement"] == "sharded"
+    assert desc["execution"]["n_shards"] == 1
+    assert plain.describe()["placement"] == "device"
+    assert plain.describe()["execution"]["device"] is None
+
+
+# ---------------------------------------------------------------------------
+# sharded bit-identity on a forced 8-device host mesh (subprocess: the
+# device count must be fixed before jax initializes)
+# ---------------------------------------------------------------------------
+
+
+_MESH8_PROGRAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import HDCConfig, HDCModel
+    from repro.serving import ServingEngine, ShardedExecution
+
+    assert jax.device_count() == 8, jax.device_count()
+    rng = np.random.default_rng(8)
+    for encoder in ("uhd", "uhd_dynamic"):
+        # D = 1000: d_local = 125 per shard, and 125 % 32 != 0 — every
+        # shard packs a ragged last word whose pad bits must cancel
+        cfg = HDCConfig(n_features=24, n_classes=4, d=1000, levels=16,
+                        similarity="hamming", encoder=encoder, sobol_skip=3)
+        x = jnp.asarray(rng.uniform(0, 255, (32, 24)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 4, (32,)), jnp.int32)
+        model = HDCModel.create(cfg).fit(x, y)
+        q = np.asarray(rng.uniform(0, 255, (16, 24)), np.float32)
+
+        execution = ShardedExecution(devices=jax.devices())
+        assert execution.n_shards == 8, execution.n_shards
+        sharded = ServingEngine(model, batch_size=16, execution=execution)
+        plain = ServingEngine(model, batch_size=16)
+        expect = np.asarray(model.predict(q))
+        np.testing.assert_array_equal(np.asarray(plain.predict(q)), expect)
+        np.testing.assert_array_equal(np.asarray(sharded.predict(q)), expect)
+    print("OK")
+""")
+
+
+def test_sharded_mesh8_bit_identical_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", _MESH8_PROGRAM],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+    )
+    assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# block-granular FIFO: one response block = one device step
+# ---------------------------------------------------------------------------
+
+
+def test_take_batch_is_block_granular():
+    cfg = _cfg()
+    engine = ServingEngine(_trained(cfg), batch_size=4)
+    batcher = MicroBatcher(engine)  # never started: takes are manual
+    q = _queries(cfg, 6)
+    a = batcher.submit_block(q[:3])
+    b = batcher.submit_block(q[3:6])
+    # 3 + 3 > 4 slots: the second block must NOT be split to fill the
+    # batch — it waits whole for the next step
+    assert batcher.step() == 3
+    assert all(f.done() for f in a) and not any(f.done() for f in b)
+    assert batcher.step() == 3
+    assert all(f.done() for f in b)
+
+
+def test_take_batch_splits_only_oversize_blocks():
+    cfg = _cfg()
+    engine = ServingEngine(_trained(cfg), batch_size=4)
+    batcher = MicroBatcher(engine)
+    futs = batcher.submit_block(_queries(cfg, 6))  # 6 > 4 slots
+    assert batcher.step() == 4  # unavoidable split at the front
+    assert batcher.step() == 2
+    assert all(f.done() for f in futs)
+    assert batcher.queue_depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# replica pool: dispatch, admission, fleet metrics
+# ---------------------------------------------------------------------------
+
+
+def _pool(model, n=2, **kw):
+    engines = [
+        ServingEngine(model, batch_size=8, execution=DeviceExecution())
+        for _ in range(n)
+    ]
+    return ReplicaPool(engines, max_delay_ms=0.5, **kw)
+
+
+def test_pool_serves_bit_identical_labels():
+    cfg = _cfg()
+    model = _trained(cfg)
+    pool = _pool(model, 3).start()
+    try:
+        q = _queries(cfg, 24)
+        got = [f.result(timeout=30.0) for f in pool.submit_many(q)]
+        np.testing.assert_array_equal(got, np.asarray(model.predict(q)))
+    finally:
+        pool.stop()
+    merged = pool.merged_metrics()
+    assert merged.n_requests == 24
+    # fleet totals = sum over replicas (pool-level metrics only admit)
+    assert sum(r.metrics.n_requests for r in pool.replicas) == 24
+    assert pool.metrics.n_requests == 0
+
+    desc = pool.describe()
+    assert desc["placement"] == "pool" and desc["n_replicas"] == 3
+    assert len(desc["replicas"]) == 3
+    assert pool.engine is pool.replicas[0].engine
+
+
+def test_pool_least_loaded_dispatch_spreads_ties():
+    cfg = _cfg()
+    pool = _pool(_trained(cfg), 2)  # not started: queues just grow
+    q = _queries(cfg, 4)
+    for img in q:
+        pool.submit(img)
+    # round-robin rotation on an idle (all-tied) fleet: 2 + 2, never 4 + 0
+    assert [r.queue_depth() for r in pool.replicas] == [2, 2]
+    for r in pool.replicas:
+        r.flush()
+
+
+def test_pool_least_loaded_dispatch_avoids_backlogged_replica():
+    cfg = _cfg()
+    pool = _pool(_trained(cfg), 2)
+    q = _queries(cfg, 8)
+    pool.replicas[0].submit_block(q[:5])  # pre-load replica 0 directly
+    for img in q[5:]:
+        pool.submit(img)
+    assert pool.replicas[1].queue_depth() == 3  # all routed to the idle one
+    for r in pool.replicas:
+        r.flush()
+
+
+def test_pool_admission_sheds_on_pool_metrics():
+    cfg = _cfg()
+    pool = _pool(_trained(cfg), 2, max_depth=2)
+    q = _queries(cfg, 3)
+    pool.submit(q[0])
+    pool.submit(q[1])
+    with pytest.raises(QueueFull, match="fleet queue depth"):
+        pool.submit(q[2])
+    assert pool.metrics.n_shed == 1
+    assert all(r.metrics.n_shed == 0 for r in pool.replicas)
+    pool.stop()  # drains the two queued requests synchronously
+    with pytest.raises(RuntimeError, match="stopped"):
+        pool.submit(q[2])
+    assert pool.metrics.n_rejected == 1
+
+
+def test_pool_refuses_single_engine_swap():
+    cfg = _cfg()
+    model = _trained(cfg)
+    pool = _pool(model, 2)
+    with pytest.raises(TypeError, match="swap_engines"):
+        pool.swap_engine(ServingEngine(model, batch_size=8))
+    with pytest.raises(ValueError, match="1 engines for 2 replicas"):
+        pool.swap_engines([ServingEngine(model, batch_size=8)])
+
+
+# ---------------------------------------------------------------------------
+# atomic promotion: every replica swaps, no response block mixes steps
+# ---------------------------------------------------------------------------
+
+
+def test_pool_promotion_swaps_all_replicas_never_mixes_steps(tmp_path):
+    cfg = _cfg()
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+
+    registry = ModelRegistry()
+    pool = registry.register_checkpoint(
+        "m", tmp_path / "ckpt", replicas=2, batch_size=8, placement="device",
+        max_delay_ms=0.5, start=True,
+    )
+    assert isinstance(pool, ReplicaPool)
+    assert registry.describe_entry("m")["placement"] == "pool"
+    q = _queries(cfg, 4)
+
+    # background traffic: whole blocks, running across the promotion
+    blocks: list[list] = []
+    stop = threading.Event()
+
+    def traffic():
+        while not stop.is_set():
+            try:
+                blocks.append(pool.submit_block(q))
+            except RuntimeError:
+                return
+
+    t = threading.Thread(target=traffic, daemon=True)
+    t.start()
+    try:
+        model.save(tmp_path / "ckpt", step=1)  # trainer publishes step 1
+        watcher = ReloadWatcher(registry, "m", interval_s=3600.0)
+        registry.attach_watcher("m", watcher)
+        assert watcher.poll_once() == 1  # promote mid-traffic
+        for _ in range(4):  # guaranteed post-promotion traffic
+            blocks.append(pool.submit_block(q))
+    finally:
+        stop.set()
+        t.join()
+
+    for block in blocks:
+        for f in block:
+            f.result(timeout=30.0)
+    # the promotion reached EVERY replica
+    assert all(r.engine.step == 1 for r in pool.replicas)
+    assert pool.merged_metrics().n_reloads >= 1
+
+    # no response block mixes steps: a block admitted together is served
+    # by one device step of one engine generation
+    steps_per_block = [
+        {f.trace.step for f in block if f.trace is not None} for block in blocks
+    ]
+    assert all(len(s) == 1 for s in steps_per_block), steps_per_block
+    seen = {s.pop() for s in steps_per_block}
+    assert 1 in seen  # the post-promotion blocks ran on the new step
+
+    # the promotion event precedes the first span served at step 1
+    events = registry.traces.snapshot(kind="event")
+    promo = [e for e in events if e["event"] == "promotion"]
+    assert promo and promo[0]["step"] == 1
+    new_spans = [
+        e for e in registry.traces.snapshot(kind="request") if e["step"] == 1
+    ]
+    assert new_spans
+    first_new = min(e["t_device_start"] for e in new_spans)
+    assert promo[0]["t_mono"] <= first_new
+
+    registry.shutdown()
+
+
+def test_pool_reload_preserves_execution_backends(tmp_path):
+    cfg = _cfg(d=96)
+    model = _trained(cfg)
+    model.save(tmp_path / "ckpt", step=0)
+    engines = [
+        ServingEngine(
+            model, batch_size=8, step=0, source=tmp_path / "ckpt",
+            execution=ShardedExecution(devices=[jax.devices()[0]]),
+        ),
+        ServingEngine(
+            model, batch_size=8, step=0, source=tmp_path / "ckpt",
+            execution=DeviceExecution(device=jax.devices()[0]),
+        ),
+    ]
+    pool = ReplicaPool(engines)
+    model.save(tmp_path / "ckpt", step=2)
+    assert pool.reload_to() == 2
+    assert [r.engine.step for r in pool.replicas] == [2, 2]
+    # each replica kept ITS placement across the promotion
+    assert pool.replicas[0].engine.execution.placement == "sharded"
+    assert pool.replicas[1].engine.execution.placement == "device"
+    q = _queries(cfg, 6)
+    pool.start()
+    try:
+        got = [f.result(timeout=30.0) for f in pool.submit_many(q)]
+        np.testing.assert_array_equal(got, np.asarray(model.predict(q)))
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# fleet observability: merged /metrics, per-replica Prometheus families
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_adds_replica_label_for_pools_only():
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry = ModelRegistry()
+    registry.register("solo", ServingEngine(model, batch_size=8))
+    pool = registry.register_pool(
+        "fleet",
+        [ServingEngine(model, batch_size=8) for _ in range(2)],
+    )
+    q = _queries(cfg, 4)
+    for img in q:
+        pool.submit(img)
+    for r in pool.replicas:
+        r.flush()
+    registry.batcher("solo").submit(q[0])
+    registry.batcher("solo").flush()
+    try:
+        text = render_prometheus(registry)
+    finally:
+        registry.shutdown()
+    # single-engine family keeps its historical label set
+    assert 'uhd_requests_total{model="solo"} 1' in text
+    # pool entries break out per replica + the pool's own admission row
+    for rep in ("0", "1", "pool"):
+        assert f'uhd_requests_total{{model="fleet",replica="{rep}"}}' in text
+    assert 'uhd_request_latency_seconds_bucket{model="fleet",replica="0",' in text
+    # `sum by (model)` over the replica rows recovers the fleet total
+    import re
+
+    counts = [
+        int(m)
+        for m in re.findall(
+            r'uhd_requests_total\{model="fleet",replica="\d+"\} (\d+)', text
+        )
+    ]
+    assert sum(counts) == 4
+
+
+def test_http_pool_entry_health_models_and_merged_metrics():
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry = ModelRegistry()
+    registry.register_pool(
+        "m",
+        [ServingEngine(model, batch_size=8) for _ in range(2)],
+        max_delay_ms=0.5,
+        start=True,
+    )
+    server = HdcHttpServer(registry).start()
+    client = HdcClient(*server.address)
+    try:
+        q = _queries(cfg, 8)
+        np.testing.assert_array_equal(
+            client.predict_batch("m", q), np.asarray(model.predict(q))
+        )
+        health = client.healthz()["models"]["m"]
+        assert health["placement"] == "pool"
+        assert [r["replica"] for r in health["replicas"]] == [0, 1]
+        assert all(
+            isinstance(r["queue_depth"], int) and isinstance(r["inflight"], int)
+            for r in health["replicas"]
+        )
+        desc = client.models()["m"]
+        assert desc["placement"] == "pool" and desc["n_replicas"] == 2
+        assert desc["replicas"][0]["placement"] == "device"
+        # JSON /metrics is the fleet-merged view: all 8 requests visible
+        snap = client.metrics()["m"]
+        assert snap["n_requests"] == 8
+    finally:
+        client.close()
+        server.stop()
+        registry.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# tail-latency exemplars: histogram bucket -> trace id -> /v1/traces?id=
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_tail_exemplars():
+    h = LatencyHistogram()
+    for _ in range(99):
+        h.observe(1e-3, exemplar="fast")
+    h.observe(0.5, exemplar="req-slow")
+    tail = h.tail_exemplars(p=99.0)
+    assert tail and tail[-1]["trace_id"] == "req-slow"
+    assert tail[-1]["count"] == 1
+    snap = h.snapshot()
+    assert any(e["trace_id"] == "req-slow" for e in snap["tail_exemplars"])
+    # exemplars survive a fleet merge (other wins ties)
+    merged = LatencyHistogram().merge(h)
+    assert merged.tail_exemplars(p=99.0)[-1]["trace_id"] == "req-slow"
+    # no exemplars recorded -> the snapshot key is absent entirely
+    assert "tail_exemplars" not in LatencyHistogram().snapshot()
+
+
+def test_batcher_exemplars_resolve_to_traces():
+    cfg = _cfg()
+    traces = TraceBuffer(64)
+    batcher = MicroBatcher(
+        ServingEngine(_trained(cfg), batch_size=8), name="m", traces=traces
+    )
+    futs = batcher.submit_block(_queries(cfg, 4))
+    batcher.flush()
+    # every tail bucket's exemplar is a real request id in the ring
+    tail = batcher.metrics.latency.tail_exemplars(p=0.0)
+    assert tail
+    for entry in tail:
+        (hit,) = traces.snapshot(request_id=entry["trace_id"])
+        assert hit["model"] == "m" and hit["kind"] == "request"
+    # and pool-routed requests stamp which replica served them
+    assert all(f.trace.replica is None for f in futs)  # plain batcher
+
+
+def test_http_traces_id_filter():
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry = ModelRegistry()
+    registry.register("m", ServingEngine(model, batch_size=8),
+                      start=True, max_delay_ms=0.5)
+    server = HdcHttpServer(registry).start()
+    client = HdcClient(*server.address)
+    try:
+        q = _queries(cfg, 3)
+        client.predict_batch("m", q)
+        snap = client.metrics()["m"]
+        exemplars = snap["stages"]  # stages never carry exemplars
+        assert not any("tail_exemplars" in s for s in exemplars.values())
+        all_traces = client.traces(kind="request")
+        assert len(all_traces) == 3
+        rid = all_traces[-1]["id"]
+        (hit,) = client.traces(request_id=rid)
+        assert hit["id"] == rid
+        assert client.traces(request_id="req-nope") == []
+    finally:
+        client.close()
+        server.stop()
+        registry.shutdown()
+
+
+def test_pool_requests_stamp_replica_into_traces():
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry = ModelRegistry()
+    pool = registry.register_pool(
+        "m", [ServingEngine(model, batch_size=8) for _ in range(2)]
+    )
+    q = _queries(cfg, 4)
+    for img in q:
+        pool.submit(img)
+    for r in pool.replicas:
+        r.flush()
+    entries = registry.traces.snapshot(kind="request")
+    assert len(entries) == 4
+    assert {e["replica"] for e in entries} == {0, 1}
+    registry.shutdown()
