@@ -19,7 +19,7 @@ Usage::
 
     python -m benchmarks.check_regression                  # gate (CI step)
     python -m benchmarks.check_regression --update-baseline
-        # rewrite baselines.json from the current artifacts (run the five
+        # rewrite baselines.json from the current artifacts (run the six
         # --fast benchmarks first); commit the result when a perf change
         # is intentional
     python -m benchmarks.check_regression --artifacts DIR --baseline FILE
@@ -82,6 +82,14 @@ SPECS: dict[str, list[tuple[str, str, float]]] = {
         ("ingest_eps", HIGHER, 3 * TOL_THROUGHPUT),
         ("publish_to_promote_ms", LOWER, 6 * TOL_LATENCY),
         ("predict_p99_ms_active", LOWER, 6 * TOL_LATENCY),
+    ],
+    "BENCH_obs": [
+        # fleet aggregation plane (DESIGN.md §13): one scrape cycle over
+        # 4 HTTP targets, the merged-view derivation, and the wall time
+        # from target death to /v1/fleet reporting it stale
+        ("scrape_cycle.p50_ms", LOWER, 6 * TOL_LATENCY),
+        ("merge.p50_ms", LOWER, 6 * TOL_LATENCY),
+        ("staleness_detect_ms", LOWER, 6 * TOL_LATENCY),
     ],
 }
 

@@ -1,0 +1,172 @@
+"""Fleet-observability benchmark: scrape+merge cost, staleness latency.
+
+Three questions about the aggregation plane (DESIGN.md §13), answered
+against four live `HdcHttpServer` targets on real sockets:
+
+  1. **scrape-cycle cost** — wall time for one full pull over the fleet
+     (4x ``/metrics?detail=state`` + ``/v1/traces``, per-target state
+     validation, trace dedup, window append);
+  2. **merge + render cost** — deriving the merged fleet view from the
+     cached per-target states (`merged_metrics`) and rendering the
+     Prometheus exposition, i.e. what serving the aggregator's own
+     ``GET /metrics`` costs per scrape of *it*;
+  3. **staleness-detection latency** — wall time from killing a target
+     to ``/v1/fleet`` reporting it stale (bounded by
+     ``stale_after_s = 3 x interval`` plus one cycle).
+
+Emits the `BENCH_obs` artifact (artifacts/bench/BENCH_obs.json), gated
+by `benchmarks.check_regression` and uploaded by CI alongside
+BENCH_{serve,encode_dynamic,transport,train,online}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import save_artifact, table
+from repro.core import HDCConfig, HDCModel
+from repro.data import load_dataset
+from repro.obs.aggregator import FleetAggregator, HttpTarget, render_fleet_prometheus
+from repro.serving import ModelRegistry
+from repro.transport import HdcClient, HdcHttpServer
+
+N_TARGETS = 4
+
+
+def _percentiles(samples_ms: list[float]) -> dict:
+    arr = np.sort(np.asarray(samples_ms, dtype=np.float64))
+    return {
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+        "mean_ms": float(arr.mean()),
+    }
+
+
+def run(fast: bool = False) -> dict:
+    n_train = 256 if fast else 1024
+    n_images = 64 if fast else 256
+    d = 512 if fast else 2048
+    iters = 20 if fast else 100
+    interval_s = 0.1
+
+    ds = load_dataset("synth_mnist", n_train=n_train, n_test=n_images)
+    cfg = HDCConfig(
+        n_features=ds.n_features, n_classes=ds.n_classes, d=d, levels=16,
+        encoder="uhd", backend="auto",
+    )
+    name = "uhd"
+    ckpt_dir = tempfile.mkdtemp(prefix="hdc_obs_bench_")
+    HDCModel.create(cfg).fit(ds.train_images, ds.train_labels).save(
+        ckpt_dir, step=0
+    )
+
+    registries, servers = [], []
+    for _ in range(N_TARGETS):
+        registry = ModelRegistry()
+        registry.register_checkpoint(
+            name, ckpt_dir, step=0, batch_size=32, start=True,
+            max_delay_ms=0.5,
+        )
+        registries.append(registry)
+        servers.append(HdcHttpServer(registry).start())
+
+    agg = FleetAggregator(
+        [HttpTarget(h, p, name=f"t{i}")
+         for i, (h, p) in enumerate(s.address for s in servers)],
+        interval_s=interval_s,
+    )
+
+    out: dict = {"n_targets": N_TARGETS, "interval_s": interval_s, "d": d}
+    try:
+        # populate every target's histograms and trace rings
+        for server in servers:
+            host, port = server.address
+            with HdcClient(host, port) as client:
+                for i in range(0, n_images, 32):
+                    client.predict_batch(name, ds.test_images[i : i + 32])
+        out["n_requests_per_target"] = (n_images + 31) // 32
+
+        # 1: full pull over the fleet (driven directly, no thread, so
+        # each sample is one cycle and nothing overlaps)
+        agg.scrape_once()  # first cycle pays connection setup
+        cycle_ms = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            agg.scrape_once()
+            cycle_ms.append((time.perf_counter() - t0) * 1e3)
+        out["scrape_cycle"] = _percentiles(cycle_ms)
+        out["n_traces"] = agg.fleet()["n_traces"]
+
+        # 2: merged view + exposition from the cached states
+        merge_ms, render_ms = [], []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            agg.merged_metrics()
+            merge_ms.append((time.perf_counter() - t0) * 1e3)
+            t0 = time.perf_counter()
+            render_fleet_prometheus(agg)
+            render_ms.append((time.perf_counter() - t0) * 1e3)
+        out["merge"] = _percentiles(merge_ms)
+        out["render_prometheus"] = _percentiles(render_ms)
+
+        # 3: kill target 0; wall time until /v1/fleet marks it stale
+        # (the plane's own scrape loop drives detection here)
+        agg.start()
+        time.sleep(2 * interval_s)
+        t_kill = time.perf_counter()
+        servers[0].stop()
+        registries[0].shutdown()
+        deadline = t_kill + 60.0
+        while True:
+            fleet = agg.fleet()
+            stale = {t["name"] for t in fleet["targets"] if t["stale"]}
+            if "t0" in stale:
+                break
+            if time.perf_counter() > deadline:
+                raise AssertionError(f"staleness never detected: {fleet}")
+            time.sleep(interval_s / 4)
+        out["staleness_detect_ms"] = (time.perf_counter() - t_kill) * 1e3
+        out["stale_after_s"] = agg.stale_after_s
+    finally:
+        agg.stop()
+        for server in servers:
+            try:
+                server.stop()
+            except Exception:
+                pass
+        for registry in registries:
+            registry.shutdown()
+
+    table(
+        f"fleet aggregation over {N_TARGETS} HTTP targets",
+        ["metric", "p50 ms", "p99 ms"],
+        [
+            ["scrape cycle (4x state+traces)",
+             f"{out['scrape_cycle']['p50_ms']:.2f}",
+             f"{out['scrape_cycle']['p99_ms']:.2f}"],
+            ["merged_metrics", f"{out['merge']['p50_ms']:.3f}",
+             f"{out['merge']['p99_ms']:.3f}"],
+            ["render exposition", f"{out['render_prometheus']['p50_ms']:.3f}",
+             f"{out['render_prometheus']['p99_ms']:.3f}"],
+            ["staleness detect (3x interval bound)",
+             f"{out['staleness_detect_ms']:.1f}", "-"],
+        ],
+    )
+    save_artifact("BENCH_obs", out)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

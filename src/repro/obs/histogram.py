@@ -80,6 +80,59 @@ class LatencyHistogram:
             if exemplar is not None:
                 self._exemplars[i] = str(exemplar)
 
+    # -- wire state (the fleet-aggregator scrape format) -------------------
+
+    def state(self) -> dict:
+        """Full-fidelity plain-JSON state: bounds, per-bucket counts,
+        exact sum, observed min/max, and exemplars.  Unlike
+        :meth:`snapshot` (percentile estimates for humans), this is the
+        *scrape* format — ``from_state(h.state())`` reconstructs a
+        histogram whose merge behavior is bit-identical to the original,
+        so a fleet aggregator can sum buckets across processes instead
+        of averaging percentiles."""
+        with self._lock:
+            return {
+                "bounds": list(self._bounds),
+                "counts": list(self._counts),
+                "count": int(self._count),
+                "sum_s": float(self._sum),
+                "min_s": self._min,
+                "max_s": self._max,
+                # JSON objects key by string; from_state converts back
+                "exemplars": {str(i): e for i, e in self._exemplars.items()},
+            }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "LatencyHistogram":
+        """Exact inverse of :meth:`state`; loud on malformed input."""
+        try:
+            bounds = tuple(float(b) for b in state["bounds"])
+            counts = [int(c) for c in state["counts"]]
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError(f"malformed histogram state: {e}") from None
+        out = cls(bounds)
+        if len(counts) != len(out._counts):
+            raise ValueError(
+                f"histogram state has {len(counts)} counts for "
+                f"{len(bounds)} bounds (want {len(out._counts)})"
+            )
+        if any(c < 0 for c in counts):
+            raise ValueError("histogram state has negative bucket counts")
+        total = int(state["count"])
+        if total != sum(counts):
+            raise ValueError(
+                f"histogram state count {total} != bucket sum {sum(counts)}"
+            )
+        out._counts = counts
+        out._count = total
+        out._sum = float(state["sum_s"])
+        out._min = None if state.get("min_s") is None else float(state["min_s"])
+        out._max = None if state.get("max_s") is None else float(state["max_s"])
+        out._exemplars = {
+            int(i): str(e) for i, e in (state.get("exemplars") or {}).items()
+        }
+        return out
+
     # -- merge -------------------------------------------------------------
 
     def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
@@ -140,6 +193,16 @@ class LatencyHistogram:
             out.append((bound, cum))
         out.append((math.inf, cum + counts[-1]))
         return out
+
+    def count_over(self, threshold_s: float) -> int:
+        """Exact count of observations recorded above the smallest bucket
+        edge >= ``threshold_s`` — the SLO-burn numerator.  Counting is
+        bucket-granular: an objective aligned to a bucket edge is exact;
+        one inside a bucket rounds up to that bucket's upper edge (so the
+        reported burn never exaggerates)."""
+        i = bisect.bisect_left(self._bounds, max(0.0, float(threshold_s)))
+        with self._lock:
+            return sum(self._counts[i + 1 :]) if i < len(self._bounds) else 0
 
     def percentile(self, p: float) -> float | None:
         """Estimated p-th percentile in seconds (None when empty).

@@ -7,6 +7,18 @@ counters end in ``_total``, histograms emit the full cumulative
 ``_bucket{le=...}`` series plus ``_sum``/``_count``, durations are in
 seconds (Prometheus base units).  The JSON form of `/metrics` stays
 the default, so nothing that scrapes the old endpoint breaks.
+
+Escaping follows the text-format spec exactly: label values escape
+``\\``, ``"`` and newline; HELP text escapes ``\\`` and newline (but
+not quotes).  Each family carries ``# HELP``/``# TYPE`` exactly once,
+however many label splits (per-stage, per-replica) feed it — the
+`Writer` groups samples by family, and :func:`parse_exposition` (the
+strict inverse, used by tests and federating scrapers) raises on any
+duplicate header, so the invariant is machine-checked, not hoped for.
+
+The building blocks (`Writer`, `serving_families`) are public: the
+fleet aggregator renders its *merged* metrics through the same code
+that renders a single process, so a dashboard cannot tell them apart.
 """
 
 from __future__ import annotations
@@ -19,12 +31,19 @@ CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 
 def _escape(value) -> str:
+    """Label-value escaping: backslash, double-quote, newline."""
     return (
         str(value)
         .replace("\\", "\\\\")
         .replace('"', '\\"')
         .replace("\n", "\\n")
     )
+
+
+def _escape_help(text: str) -> str:
+    """HELP-text escaping: backslash and newline only (per the spec,
+    quotes are literal in HELP)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
 
 
 def _labels(labels: dict) -> str:
@@ -45,8 +64,9 @@ def _num(value) -> str:
     return repr(f)
 
 
-class _Writer:
-    """Groups samples by family so HELP/TYPE headers are emitted once."""
+class Writer:
+    """Groups samples by family so HELP/TYPE headers are emitted once,
+    whatever order (and under whatever label splits) samples arrive."""
 
     def __init__(self):
         self._families: dict[str, tuple[str, str, list[str]]] = {}
@@ -70,20 +90,26 @@ class _Writer:
         out = []
         for name, (mtype, help, lines) in self._families.items():
             if help:
-                out.append(f"# HELP {name} {help}")
+                out.append(f"# HELP {name} {_escape_help(help)}")
             out.append(f"# TYPE {name} {mtype}")
             out.extend(lines)
         return "\n".join(out) + "\n"
 
 
-def _serving_families(w: _Writer, labels: dict, m) -> None:
+# back-compat aliases (pre-aggregator internal names)
+_Writer = Writer
+
+
+def serving_families(w: Writer, labels: dict, m) -> None:
     """Emit the ``uhd_*`` serving families for one `ServingMetrics`
     under the given label set.  A single-engine entry passes
     ``{"model": name}`` (the historical label set, unchanged); a
     replica-pool entry calls this once per replica with an added
     ``replica="<i>"`` label plus once with ``replica="pool"`` for the
     pool's own admission counters — `sum by (model)` recovers the
-    fleet totals exactly because histograms merge bucket-wise."""
+    fleet totals exactly because histograms merge bucket-wise.  The
+    fleet aggregator calls it once per model with the cross-target
+    merged metrics."""
     counters = (
         ("uhd_requests_total", m.n_requests, "requests completed"),
         ("uhd_request_errors_total", m.n_errors, "requests failed"),
@@ -108,11 +134,14 @@ def _serving_families(w: _Writer, labels: dict, m) -> None:
                     hist, help="per-stage request latency")
 
 
+_serving_families = serving_families
+
+
 def render_prometheus(registry) -> str:
     """Text exposition for one `ModelRegistry` (serving + transport
     admission + watcher + online learner, per model; per replica for
     pool entries)."""
-    w = _Writer()
+    w = Writer()
     for name in registry.names():
         try:
             batcher = registry.batcher(name)
@@ -121,11 +150,11 @@ def render_prometheus(registry) -> str:
         labels = {"model": name}
         replicas = getattr(batcher, "replicas", None)
         if replicas is not None:  # ReplicaPool: per-replica + admission
-            _serving_families(w, {**labels, "replica": "pool"}, batcher.metrics)
+            serving_families(w, {**labels, "replica": "pool"}, batcher.metrics)
             for i, r in enumerate(replicas):
-                _serving_families(w, {**labels, "replica": str(i)}, r.metrics)
+                serving_families(w, {**labels, "replica": str(i)}, r.metrics)
         else:
-            _serving_families(w, labels, batcher.metrics)
+            serving_families(w, labels, batcher.metrics)
 
         watcher = registry.watcher(name)
         if watcher is not None:
@@ -168,4 +197,127 @@ def render_prometheus(registry) -> str:
             if isinstance(hist, LatencyHistogram):
                 w.histogram("uhd_online_publish_seconds", labels, hist,
                             help="checkpoint publish (save) latency")
+            # online-path stage instrumentation (ingest/train/publish)
+            metrics = getattr(learner, "metrics", None)
+            if metrics is not None:
+                w.histogram("uhd_online_feedback_to_publish_seconds", labels,
+                            metrics.latency,
+                            help="oldest-feedback-to-checkpoint-publish "
+                                 "latency per publish cycle")
+                for stage, hist in metrics.stage.items():
+                    w.histogram("uhd_online_stage_latency_seconds",
+                                {**labels, "stage": stage}, hist,
+                                help="per-stage online-learning latency")
     return w.render()
+
+
+# -- parsing (the strict inverse; tests + federating scrapers) --------------
+
+
+def _unescape_label(value: str) -> str:
+    out, i = [], 0
+    while i < len(value):
+        c = value[i]
+        if c == "\\" and i + 1 < len(value):
+            nxt = value[i + 1]
+            out.append("\n" if nxt == "n" else nxt)
+            i += 2
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def _parse_label_block(block: str, line: str) -> dict[str, str]:
+    """``k1="v1",k2="v2"`` -> dict, honoring escaped quotes/commas."""
+    labels: dict[str, str] = {}
+    i = 0
+    while i < len(block):
+        eq = block.find("=", i)
+        if eq < 0 or i + 1 > eq:
+            raise ValueError(f"malformed labels in line {line!r}")
+        key = block[i:eq].strip()
+        if eq + 1 >= len(block) or block[eq + 1] != '"':
+            raise ValueError(f"unquoted label value in line {line!r}")
+        j = eq + 2
+        raw = []
+        while j < len(block):
+            c = block[j]
+            if c == "\\":
+                if j + 1 >= len(block):
+                    raise ValueError(f"dangling escape in line {line!r}")
+                raw.append(block[j : j + 2])
+                j += 2
+                continue
+            if c == '"':
+                break
+            raw.append(c)
+            j += 1
+        else:
+            raise ValueError(f"unterminated label value in line {line!r}")
+        labels[key] = _unescape_label("".join(raw))
+        i = j + 1
+        if i < len(block):
+            if block[i] != ",":
+                raise ValueError(f"malformed label separator in line {line!r}")
+            i += 1
+    return labels
+
+
+def parse_exposition(text: str):
+    """Strict parse of text format 0.0.4 -> ``(types, helps, samples)``.
+
+    ``types``/``helps`` map family name to its TYPE/HELP (unescaped);
+    ``samples`` is ``[(name, labels_dict, value_float)]`` in document
+    order with label values fully unescaped.  Raises ValueError on a
+    duplicate HELP or TYPE for a family, a malformed label block, or a
+    non-numeric value — the parser is the audit: if the exposition
+    survives it, every family header is unique and every hostile label
+    value round-trips.
+    """
+    types: dict[str, str] = {}
+    helps: dict[str, str] = {}
+    samples: list[tuple[str, dict[str, str], float]] = []
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(None, 3)
+            if len(parts) != 4:
+                raise ValueError(f"malformed TYPE line {line!r}")
+            fam, mtype = parts[2], parts[3]
+            if fam in types:
+                raise ValueError(f"duplicate TYPE for family {fam!r}")
+            types[fam] = mtype
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(None, 3)
+            if len(parts) < 3:
+                raise ValueError(f"malformed HELP line {line!r}")
+            fam = parts[2]
+            if fam in helps:
+                raise ValueError(f"duplicate HELP for family {fam!r}")
+            raw = parts[3] if len(parts) == 4 else ""
+            helps[fam] = (
+                raw.replace("\\n", "\n").replace("\\\\", "\\")
+            )
+            continue
+        if line.startswith("#"):
+            continue  # comments are legal and skippable
+        metric, _, value = line.rpartition(" ")
+        if not metric:
+            raise ValueError(f"malformed sample line {line!r}")
+        name, brace, rest = metric.partition("{")
+        labels: dict[str, str] = {}
+        if brace:
+            if not rest.endswith("}"):
+                raise ValueError(f"unterminated label block in line {line!r}")
+            labels = _parse_label_block(rest[:-1], line)
+        try:
+            parsed = float(value)
+        except ValueError:
+            raise ValueError(
+                f"non-numeric value {value!r} in line {line!r}"
+            ) from None
+        samples.append((name.strip(), labels, parsed))
+    return types, helps, samples

@@ -43,6 +43,32 @@ def new_request_id(prefix: str = "req") -> str:
     return f"{prefix}-{_PID_TAG}-{next(_SEQ):08x}"
 
 
+#: longest id accepted from the wire (x-hdc-request-id header)
+MAX_REQUEST_ID_LEN = 128
+
+
+def adopt_request_id(raw: str | None) -> str | None:
+    """Validate a caller-supplied request id for cross-hop tracing.
+
+    `HdcClient` mints an id and sends it as ``x-hdc-request-id``; the
+    server *adopts* it instead of minting, so one id names the request
+    from client through pool dispatch to device step, fleet-wide.  The
+    id crosses a trust boundary, so adoption is strict: printable ASCII
+    without whitespace/quotes/braces (it is embedded in JSON, JSONL,
+    and Prometheus exemplar output), bounded length.  Returns None —
+    mint locally — for anything unacceptable; a hostile header can
+    degrade its own trace, never the ring or the exposition.
+    """
+    if not raw:
+        return None
+    rid = raw.strip()
+    if not 0 < len(rid) <= MAX_REQUEST_ID_LEN:
+        return None
+    if any(c <= " " or c > "~" or c in '"\\{}' for c in rid):
+        return None
+    return rid
+
+
 class RequestTrace:
     """Mutable per-request span marks (monotonic seconds).
 

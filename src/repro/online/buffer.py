@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 
 import numpy as np
 
@@ -37,15 +38,21 @@ class FeedbackBuffer:
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.capacity = int(capacity)
-        self._blocks: collections.deque[tuple[np.ndarray, np.ndarray]] = (
-            collections.deque()
-        )
+        # (images, labels, t_put): blocks carry their admission time so
+        # the learner can report ingest wait (put -> drain) honestly
+        self._blocks: collections.deque[
+            tuple[np.ndarray, np.ndarray, float]
+        ] = collections.deque()
         self._n = 0  # queued examples (sum over blocks)
         self._cv = threading.Condition()
         self._closed = False
         # counters (read via snapshot(); ints only)
         self.n_ingested = 0  # examples accepted into the buffer, ever
         self.n_shed = 0  # examples refused because the buffer was full
+        #: put time (perf_counter) of the oldest example returned by the
+        #: most recent successful `drain` — the learner's ingest-wait and
+        #: feedback-to-publish measurements anchor here
+        self.last_drained_oldest_t: float | None = None
 
     # -- ingest (server/event-loop side; never blocks) ---------------------
 
@@ -73,7 +80,7 @@ class FeedbackBuffer:
             if self._n + n > self.capacity:
                 self.n_shed += n
                 return False
-            self._blocks.append((images, labels))
+            self._blocks.append((images, labels, time.perf_counter()))
             self._n += n
             self.n_ingested += n
             self._cv.notify_all()
@@ -99,20 +106,27 @@ class FeedbackBuffer:
             if not self._blocks:
                 return None
             xs, ys, taken = [], [], 0
+            oldest_t: float | None = None
             while self._blocks:
-                x, y = self._blocks[0]
+                x, y, t_put = self._blocks[0]
                 room = None if max_examples is None else max_examples - taken
                 if room is not None and room <= 0:
                     break
                 if room is not None and len(x) > room:
-                    self._blocks[0] = (x[room:], y[room:])
+                    # the split tail keeps its original put time: those
+                    # examples have been waiting since that put
+                    self._blocks[0] = (x[room:], y[room:], t_put)
                     x, y = x[:room], y[:room]
                 else:
                     self._blocks.popleft()
+                if oldest_t is None:
+                    oldest_t = t_put  # FIFO: the first block is the oldest
                 xs.append(x)
                 ys.append(y)
                 taken += len(x)
             self._n -= taken
+            if xs:
+                self.last_drained_oldest_t = oldest_t
         if not xs:
             return None
         return np.concatenate(xs), np.concatenate(ys)

@@ -37,6 +37,12 @@ import numpy as np
 from repro.core.hdc_model import HDCModel
 from repro.obs.histogram import LatencyHistogram
 from repro.online.buffer import FeedbackBuffer
+from repro.serving.metrics import ServingMetrics
+
+#: online-path pipeline stages (mirrors serving's queue/assembly/device/
+#: write): ingest = oldest example's put->drain wait, train = one
+#: ``partial_fit`` chunk on the device, publish = checkpoint save
+ONLINE_STAGES = ("ingest", "train", "publish")
 
 
 class OnlineLearner:
@@ -86,6 +92,16 @@ class OnlineLearner:
         self.n_errors = 0
         self.publish_hist = LatencyHistogram()  # checkpoint save latency
         self.last_publish_ms: float | None = None
+        # per-stage observability, same machinery as the serving path:
+        # `metrics.stage` holds one histogram per ONLINE_STAGES entry and
+        # `metrics.latency` records oldest-feedback-to-publish latency per
+        # publish cycle.  Rendered as uhd_online_stage_latency_seconds /
+        # uhd_online_feedback_to_publish_seconds in the Prometheus form
+        # and merged exactly by the fleet aggregator.
+        self.metrics = ServingMetrics()
+        self.metrics.stage = {s: LatencyHistogram() for s in ONLINE_STAGES}
+        self._oldest_unpublished_t: float | None = None
+        self._stage_ms_since_publish = {s: 0.0 for s in ONLINE_STAGES}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -164,6 +180,7 @@ class OnlineLearner:
             )
             try:
                 if got is not None:
+                    self._observe_ingest()
                     self._enqueue_pending(*got)
                     self._train_pending(flush=False)
                 if self._dirty() and self._publish_due():
@@ -179,6 +196,7 @@ class OnlineLearner:
                     got = self.buffer.drain(max_examples=None, timeout=0.0)
                     if got is None:
                         break
+                    self._observe_ingest()
                     self._enqueue_pending(*got)
                 self._train_pending(flush=True)
                 if self._dirty():
@@ -187,6 +205,20 @@ class OnlineLearner:
                 with self._lock:
                     self.n_errors += 1
                     self.last_error = e
+
+    def _observe_ingest(self) -> None:
+        """Close the ingest span for the drain that just returned: the
+        put->drain wait of its *oldest* example (the honest number — a
+        mean over the block would hide head-of-line blocking)."""
+        t_oldest = self.buffer.last_drained_oldest_t
+        if t_oldest is None:
+            return
+        wait = max(0.0, time.perf_counter() - t_oldest)
+        self.metrics.observe_stage("ingest", wait)
+        self._stage_ms_since_publish["ingest"] += wait * 1e3
+        if self._oldest_unpublished_t is None:
+            # anchors this publish cycle's feedback-to-publish latency
+            self._oldest_unpublished_t = t_oldest
 
     def _enqueue_pending(self, images: np.ndarray, labels: np.ndarray) -> None:
         self._pending.append((images, labels))
@@ -214,7 +246,11 @@ class OnlineLearner:
 
     def _fit(self, x: np.ndarray, y: np.ndarray) -> None:
         # donated-state hot loop: the (C, D) accumulator updates in place
+        t0 = time.perf_counter()
         self._model = self._model.partial_fit(x, y, donate=True)
+        dt = time.perf_counter() - t0
+        self.metrics.observe_stage("train", dt)
+        self._stage_ms_since_publish["train"] += dt * 1e3
         with self._lock:
             self.n_trained += len(x)
             self._n_since_publish += len(x)
@@ -238,7 +274,19 @@ class OnlineLearner:
         self._model.save(self._source, step=step, keep_n=self.keep_n)
         elapsed = time.perf_counter() - t0
         self.publish_hist.observe(elapsed)
+        self.metrics.observe_stage("publish", elapsed)
+        self._stage_ms_since_publish["publish"] += elapsed * 1e3
         self.last_publish_ms = elapsed * 1e3
+        # close the cycle-level span: oldest acknowledged feedback ->
+        # checkpoint on disk (the user-visible freshness number)
+        t_oldest, self._oldest_unpublished_t = self._oldest_unpublished_t, None
+        if t_oldest is not None:
+            self.metrics.latency.observe(
+                max(0.0, time.perf_counter() - t_oldest)
+            )
+        spans = {f"{s}_ms": float(v)
+                 for s, v in self._stage_ms_since_publish.items()}
+        self._stage_ms_since_publish = {s: 0.0 for s in ONLINE_STAGES}
         with self._lock:
             self.step = step
             self.n_published += 1
@@ -249,13 +297,16 @@ class OnlineLearner:
             # t_mono = save *start*: the checkpoint cannot be promoted —
             # and therefore no request span can carry the new step —
             # before the save began, so this event provably precedes the
-            # first span served by the promoted engine
+            # first span served by the promoted engine.  `spans` breaks
+            # the cycle down (ingest wait / device train / save) like a
+            # request trace's queue/device/write.
             traces.record_event(
                 "publish",
                 model=self.name,
                 step=int(step),
                 duration_ms=elapsed * 1e3,
                 t_mono=t0,
+                spans=spans,
             )
         if self._on_publish is not None:
             try:
@@ -287,6 +338,12 @@ class OnlineLearner:
                 "base_step": self.base_step,
                 "step": self.step,
                 "last_publish_ms": self.last_publish_ms,
+                # per-stage percentiles (ingest wait / train / publish)
+                # plus the cycle-level feedback-to-publish latency
+                "stages": {
+                    s: h.snapshot() for s, h in self.metrics.stage.items()
+                },
+                "feedback_to_publish": self.metrics.latency.snapshot(),
             }
 
     def describe(self) -> dict:

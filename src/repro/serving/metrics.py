@@ -115,10 +115,7 @@ class ServingMetrics:
             a = self._counter_state()
         with other._lock:
             b = other._counter_state()
-        for key in (
-            "n_requests", "n_batches", "n_slots", "n_padded", "n_errors",
-            "n_reloads", "n_shed", "n_rejected", "queue_depth", "inflight",
-        ):
+        for key in self.COUNTERS:
             setattr(out, key, a[key] + b[key])
         out._t0 = min(a["_t0"], b["_t0"])
         firsts = [t for t in (a["_t_first"], b["_t_first"]) if t is not None]
@@ -146,6 +143,46 @@ class ServingMetrics:
             "_t0": self._t0,
             "_t_first": self._t_first, "_t_last": self._t_last,
         }
+
+    # -- wire state (fleet-aggregator scrape format) -----------------------
+
+    #: counters carried by state()/from_state() and summed by merge()
+    COUNTERS = (
+        "n_requests", "n_batches", "n_slots", "n_padded", "n_errors",
+        "n_reloads", "n_shed", "n_rejected", "queue_depth", "inflight",
+    )
+
+    def state(self) -> dict:
+        """Full-fidelity plain-JSON state: every counter plus the
+        latency/stage histograms in their exact bucket form.  This is
+        what ``GET /metrics?detail=state`` serves and what the fleet
+        aggregator merges — summed buckets, never averaged percentiles
+        (`from_state(m.state()).merge(...)` is bit-identical to merging
+        the live instances)."""
+        with self._lock:
+            counters = {k: int(getattr(self, k)) for k in self.COUNTERS}
+        return {
+            "counters": counters,
+            "latency": self.latency.state(),
+            "stages": {name: h.state() for name, h in self.stage.items()},
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "ServingMetrics":
+        """Exact inverse of :meth:`state`; loud on malformed input."""
+        out = cls()
+        try:
+            counters = state["counters"]
+            for key in cls.COUNTERS:
+                setattr(out, key, int(counters.get(key, 0)))
+            out.latency = LatencyHistogram.from_state(state["latency"])
+            out.stage = {
+                str(name): LatencyHistogram.from_state(h)
+                for name, h in state.get("stages", {}).items()
+            }
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"malformed metrics state: {e}") from None
+        return out
 
     # -- reads ------------------------------------------------------------
 

@@ -71,6 +71,12 @@ class ReplicaPool:
         self._lock = threading.Lock()
         self._rr = 0  # rotation origin: round-robins ties
         self._closed = False
+        # dispatch distribution (submit_block calls routed per replica);
+        # the chosen replica is also stamped on every request's trace
+        # (`RequestTrace.replica` via the replica's MicroBatcher), so a
+        # span resolved at `/v1/traces?id=` — locally or at the fleet
+        # aggregator — names the exact replica that served it
+        self.n_dispatched = [0] * len(engines)
         self.replicas = [
             MicroBatcher(
                 engine, max_delay_ms=max_delay_ms, max_depth=None,
@@ -146,6 +152,7 @@ class ReplicaPool:
             if best_score is None or score < best_score:
                 best, best_score = i, score
         self._rr = (best + 1) % n
+        self.n_dispatched[best] += 1
         return self.replicas[best]
 
     # -- lifecycle ---------------------------------------------------------
@@ -237,4 +244,5 @@ class ReplicaPool:
         out["placement"] = self.placement
         out["n_replicas"] = len(reps)
         out["replicas"] = reps
+        out["n_dispatched"] = [int(c) for c in self.n_dispatched]
         return out

@@ -283,6 +283,33 @@ class ModelRegistry:
     def describe(self) -> dict[str, dict]:
         return {name: self.describe_entry(name) for name in self.names()}
 
+    def metrics_state(self) -> dict[str, dict]:
+        """Full-fidelity per-model metrics for fleet aggregation: the
+        exact bucket-level `ServingMetrics.state()` (fleet-merged for
+        pool entries) plus the learner snapshot.  Served by
+        ``GET /metrics?detail=state`` and read directly by in-process
+        scrape targets — one code path, so HTTP and local aggregation
+        can never skew."""
+        out = {}
+        for name in self.names():
+            try:
+                batcher = self.batcher(name)
+            except KeyError:  # racing an unregister
+                continue
+            merged = getattr(batcher, "merged_metrics", None)
+            metrics = merged() if merged is not None else batcher.metrics
+            entry = {"serving": metrics.state()}
+            learner = self.learner(name)
+            if learner is not None:
+                entry["online"] = learner.snapshot()
+                # exact-merge form of the online-path histograms, for the
+                # same bit-identical fleet aggregation as "serving"
+                metrics_state = getattr(learner, "metrics", None)
+                if metrics_state is not None:
+                    entry["online_metrics"] = metrics_state.state()
+            out[name] = entry
+        return out
+
     # -- hot reload --------------------------------------------------------
 
     def hot_reload(self, name: str, *, step: int | None = None) -> int | None:

@@ -23,6 +23,7 @@ from urllib.parse import urlencode
 
 import numpy as np
 
+from repro.obs.trace import new_request_id
 from repro.transport import protocol
 
 
@@ -44,6 +45,11 @@ class HdcClient:
         self.host, self.port = host, int(port)
         self.timeout_s = float(timeout_s)
         self._conn: http.client.HTTPConnection | None = None
+        #: id sent with the most recent predict call (cross-hop tracing:
+        #: the server adopts it, so `/v1/traces?id=<last_request_id>` —
+        #: on the server *or* the fleet aggregator — resolves the spans
+        #: of the request this client just made)
+        self.last_request_id: str | None = None
 
     # -- plumbing ----------------------------------------------------------
 
@@ -118,6 +124,9 @@ class HdcClient:
         a str, for scrapers and the stage-breakdown benchmarks)."""
         if not prometheus:
             return self._json("GET", protocol.ROUTE_METRICS)
+        return self.metrics_prometheus()
+
+    def metrics_prometheus(self) -> str:
         status, content_type, payload = self._request(
             "GET", protocol.ROUTE_METRICS, headers={"Accept": "text/plain"}
         )
@@ -127,6 +136,17 @@ class HdcClient:
                 status, f"expected text/plain exposition, got {content_type}"
             )
         return payload.decode("utf-8")
+
+    def metrics_state(self) -> dict:
+        """Full-fidelity cumulative metrics (`GET /metrics?detail=state`):
+        per model, every counter plus the exact histogram buckets —
+        the fleet aggregator's scrape call.  Reconstruct with
+        `ServingMetrics.from_state` and merge across processes;
+        the result is bit-identical to merging the live instances."""
+        return self._json(
+            "GET",
+            f"{protocol.ROUTE_METRICS}?detail={protocol.METRICS_DETAIL_STATE}",
+        )
 
     def traces(
         self,
@@ -155,22 +175,42 @@ class HdcClient:
 
     # -- predict -----------------------------------------------------------
 
-    def predict(self, name: str, image) -> int:
+    def _trace_headers(self, request_id: str | None) -> dict[str, str]:
+        """Mint (or adopt the caller's) request id and remember it in
+        `last_request_id` — the handle for resolving this request's
+        spans at any hop (`traces(request_id=...)`, or the fleet
+        aggregator's ``/v1/traces?id=``)."""
+        rid = request_id or new_request_id("cli")
+        self.last_request_id = rid
+        return {protocol.HDR_REQUEST_ID: rid}
+
+    def predict(self, name: str, image, *, request_id: str | None = None) -> int:
         """Single image over the JSON control form -> int label."""
         body = json.dumps(
             {"image": np.asarray(image, np.float32).ravel().tolist()}
         ).encode()
         out = self._json(
             "POST", protocol.predict_path(name), body,
-            {"Content-Type": protocol.CT_JSON},
+            {"Content-Type": protocol.CT_JSON,
+             **self._trace_headers(request_id)},
         )
         return int(out["label"])
 
-    def predict_batch(self, name: str, images, *, binary: bool = True) -> np.ndarray:
+    def predict_batch(
+        self,
+        name: str,
+        images,
+        *,
+        binary: bool = True,
+        request_id: str | None = None,
+    ) -> np.ndarray:
         """(n, H) images -> (n,) int32 labels.
 
         `binary=True` is the hot path: raw f32 out, raw i32 back.
-        `binary=False` exercises the JSON batch form.
+        `binary=False` exercises the JSON batch form.  Either way the
+        request carries an ``x-hdc-request-id`` (minted here unless
+        `request_id` is given); a batch of n fans out to slot traces
+        ``<id>/0`` .. ``<id>/n-1`` on the server.
         """
         images = np.asarray(images, np.float32)
         if binary:
@@ -178,7 +218,8 @@ class HdcClient:
                 "POST",
                 protocol.predict_path(name),
                 protocol.encode_images(images),
-                {"Content-Type": protocol.CT_F32, "Accept": protocol.CT_I32},
+                {"Content-Type": protocol.CT_F32, "Accept": protocol.CT_I32,
+                 **self._trace_headers(request_id)},
             )
             self._raise_for_status(status, content_type, payload)
             if content_type != protocol.CT_I32:
@@ -189,7 +230,8 @@ class HdcClient:
         body = json.dumps({"images": images.tolist()}).encode()
         out = self._json(
             "POST", protocol.predict_path(name), body,
-            {"Content-Type": protocol.CT_JSON},
+            {"Content-Type": protocol.CT_JSON,
+             **self._trace_headers(request_id)},
         )
         return np.asarray(out["labels"], np.int32)
 

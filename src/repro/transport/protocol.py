@@ -39,9 +39,22 @@ ROUTE_HEALTH = "/healthz"
 ROUTE_MODELS = "/v1/models"
 ROUTE_METRICS = "/metrics"
 ROUTE_TRACES = "/v1/traces"
+ROUTE_FLEET = "/v1/fleet"  # aggregator-only: per-target scrape health
 ROUTE_PROFILE = "/v1/debug/profile"
 PREDICT_SUFFIX = ":predict"
 FEEDBACK_SUFFIX = ":feedback"
+
+#: cross-hop trace propagation: the client mints a request id and sends
+#: it here; the server adopts it (after `repro.obs.trace.adopt_request_id`
+#: sanitization) instead of minting, so one id names the request from
+#: client through pool dispatch to device step, fleet-wide
+HDR_REQUEST_ID = "x-hdc-request-id"
+
+#: `GET /metrics?detail=state` — full-fidelity cumulative scrape format
+#: (exact histogram buckets via `ServingMetrics.state()`), the fleet
+#: aggregator's wire form; merged buckets are bit-identical to merging
+#: the live instances, which parsed text exposition could never be
+METRICS_DETAIL_STATE = "state"
 
 
 def sanitize_json(obj):

@@ -8,11 +8,21 @@ posts the drain thread's resolution back onto the loop with
 `call_soon_threadsafe`, so 10k in-flight requests cost 10k small
 futures, not 10k blocked threads.
 
-Routes (DESIGN.md §8, §10):
+The HTTP machinery itself (lifecycle, keep-alive connection handling,
+request parse, response write, drain-aware shutdown) lives in
+:class:`AsyncHttpServer`, a routing-free base class; `HdcHttpServer`
+adds the serving routes, and the fleet aggregator's front-end
+(`repro.obs.aggregator.AggregatorServer`) adds its own on the same
+base — one HTTP implementation, audited once.
+
+Routes (DESIGN.md §8, §10, §13):
 
   * ``POST /v1/models/{name}:predict`` — single or batch.  JSON control
     form or the raw little-endian ``application/x-hdc-f32`` hot path;
     ``Accept: application/x-hdc-i32`` selects raw int32 labels back.
+    An ``x-hdc-request-id`` header is *adopted* (after strict
+    sanitization) instead of minting, so a client-minted id names the
+    request across hops — client, server, pool replica, device step.
   * ``POST /v1/models/{name}:feedback`` — labeled examples for the
     model's `OnlineLearner`.  Labels are validated at the boundary
     (`encoding.validate_labels`; out-of-range or shape mismatch -> 400)
@@ -28,10 +38,13 @@ Routes (DESIGN.md §8, §10):
     JSON by default (fleet-merged for pool entries); ``Accept:
     text/plain`` negotiates Prometheus text exposition instead
     (``uhd_*`` families, with a ``replica`` label for pools,
-    DESIGN.md §11-§12).
+    DESIGN.md §11-§12); ``?detail=state`` serves the full-fidelity
+    cumulative scrape form (`ModelRegistry.metrics_state`) that the
+    fleet aggregator merges bit-identically.
   * ``GET /v1/traces`` — last-n per-request spans + lifecycle events
     from the shared trace ring (``?n=&kind=&model=&id=`` filters;
-    ``id`` resolves a tail-latency exemplar to its full trace).
+    ``id`` resolves a tail-latency exemplar to its full trace, and an
+    unknown id is a 404 with a JSON error body, not an empty list).
   * ``POST /v1/debug/profile?ms=N`` — opt-in ``jax.profiler`` capture
     window; 403 unless the server was started with
     ``enable_profiling=True``.
@@ -62,7 +75,7 @@ from urllib.parse import parse_qs, unquote, urlsplit
 from repro.core import encoding
 from repro.obs import profiler as _profiler
 from repro.obs.prometheus import render_prometheus
-from repro.obs.trace import OWNER_TRANSPORT, new_request_id
+from repro.obs.trace import OWNER_TRANSPORT, adopt_request_id, new_request_id
 from repro.serving.batcher import QueueFull
 from repro.serving.registry import ModelRegistry
 from repro.transport import protocol
@@ -108,32 +121,39 @@ class _Response:
         return cls.json(status, {"error": message, **extra})
 
 
-class HdcHttpServer:
-    """Asyncio HTTP/1.1 front-end for a `ModelRegistry`."""
+# public names for subclass implementations outside this module
+Request = _Request
+Response = _Response
+
+
+class AsyncHttpServer:
+    """Routing-free asyncio HTTP/1.1 server on a daemon loop thread.
+
+    Owns everything protocol-level: bind/teardown, keep-alive
+    connection handling, request parsing (with oversize-payload refusal
+    that drains the wire without buffering), response writing (with the
+    exactly-once ``on_written`` callback), and drain-aware shutdown
+    (idle keep-alive connections are cancelled immediately; connections
+    mid-request get the drain window).  Subclasses implement one
+    coroutine, :meth:`_route`, mapping a :class:`_Request` to a
+    :class:`_Response`; any exception it leaks answers 500 on the same
+    connection instead of killing it.
+    """
 
     def __init__(
         self,
-        registry: ModelRegistry,
         *,
         host: str = "127.0.0.1",
         port: int = 0,
-        max_queue_depth: int | None = 1024,
         max_body_bytes: int = 32 << 20,
         request_timeout_s: float = 60.0,
-        enable_profiling: bool = False,
-        profile_dir: str | None = None,
+        thread_name: str = "hdc-http-loop",
     ):
-        self.registry = registry
         self.host = host
         self.port = port  # 0 -> ephemeral; rewritten to the bound port
-        self.max_queue_depth = max_queue_depth
         self.max_body_bytes = int(max_body_bytes)
         self.request_timeout_s = float(request_timeout_s)
-        # POST /v1/debug/profile is 403 unless explicitly enabled: a
-        # profiler capture stalls the device and writes to disk, so it
-        # must be an operator decision, never a default
-        self.enable_profiling = bool(enable_profiling)
-        self.profile_dir = profile_dir
+        self._thread_name = thread_name
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
         self._server: asyncio.AbstractServer | None = None
@@ -145,14 +165,15 @@ class HdcHttpServer:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def start(self) -> "HdcHttpServer":
+    def start(self):
         """Bind and serve on a background event-loop thread; returns
-        once the socket is listening (`self.port` holds the bound port)."""
+        self once the socket is listening (`self.port` holds the bound
+        port)."""
         if self._thread is not None:
             raise RuntimeError("server already started")
         self._loop = asyncio.new_event_loop()
         self._thread = threading.Thread(
-            target=self._loop.run_forever, name="hdc-http-loop", daemon=True
+            target=self._loop.run_forever, name=self._thread_name, daemon=True
         )
         self._thread.start()
         fut = asyncio.run_coroutine_threadsafe(self._bind(), self._loop)
@@ -168,8 +189,9 @@ class HdcHttpServer:
     def stop(self, *, drain: bool = True, timeout_s: float = 30.0) -> None:
         """Stop accepting, then (with `drain`) wait for in-flight
         connections to finish before tearing the loop down.  Idempotent.
-        Does not touch the registry — `ModelRegistry.shutdown()` is the
-        caller's next line (watchers -> batcher drain -> engines)."""
+        Does not touch whatever the subclass serves from —
+        `ModelRegistry.shutdown()` is the serving caller's next line
+        (watchers -> batcher drain -> engines)."""
         loop, self._loop = self._loop, None
         thread, self._thread = self._thread, None
         if loop is None:
@@ -325,6 +347,39 @@ class HdcHttpServer:
             )
 
     async def _route(self, request: _Request) -> _Response:
+        raise NotImplementedError("subclasses implement _route")
+
+
+class HdcHttpServer(AsyncHttpServer):
+    """Asyncio HTTP/1.1 front-end for a `ModelRegistry`."""
+
+    def __init__(
+        self,
+        registry: ModelRegistry,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        max_queue_depth: int | None = 1024,
+        max_body_bytes: int = 32 << 20,
+        request_timeout_s: float = 60.0,
+        enable_profiling: bool = False,
+        profile_dir: str | None = None,
+    ):
+        super().__init__(
+            host=host, port=port, max_body_bytes=max_body_bytes,
+            request_timeout_s=request_timeout_s, thread_name="hdc-http-loop",
+        )
+        self.registry = registry
+        self.max_queue_depth = max_queue_depth
+        # POST /v1/debug/profile is 403 unless explicitly enabled: a
+        # profiler capture stalls the device and writes to disk, so it
+        # must be an operator decision, never a default
+        self.enable_profiling = bool(enable_profiling)
+        self.profile_dir = profile_dir
+
+    # -- routing -----------------------------------------------------------
+
+    async def _route(self, request: _Request) -> _Response:
         method, path = request.method.upper(), request.path
         if path == protocol.ROUTE_HEALTH and method == "GET":
             return self._health()
@@ -406,9 +461,12 @@ class HdcHttpServer:
         return _Response.json(HTTPStatus.OK, {"status": "ok", "models": models})
 
     def _metrics(self, request: _Request) -> _Response:
-        # content negotiation: Prometheus scrapers send Accept: text/plain
-        # (and would choke on JSON); everything else keeps the JSON
-        # snapshot the smoke CLI and benchmarks have always read
+        # three forms, one endpoint: `?detail=state` is the aggregator's
+        # full-fidelity cumulative scrape (exact buckets, merge-safe);
+        # Accept: text/plain negotiates Prometheus exposition; everything
+        # else keeps the JSON snapshot the smoke CLI has always read
+        if request.query.get("detail") == protocol.METRICS_DETAIL_STATE:
+            return _Response.json(HTTPStatus.OK, self.registry.metrics_state())
         if "text/plain" in request.header("accept", "").lower():
             return _Response(
                 HTTPStatus.OK,
@@ -436,9 +494,18 @@ class HdcHttpServer:
         """Last-n view of the shared trace ring, optionally filtered:
         ``GET /v1/traces?n=100&kind=request&model=mnist``;
         ``?id=<request_id>`` resolves one exact trace (the target of a
-        tail-latency exemplar from `/metrics`)."""
+        tail-latency exemplar from `/metrics`) — a miss is a 404 with a
+        JSON error body, so an exemplar pointing at an evicted ring
+        entry fails loudly instead of returning an empty 200."""
         traces = getattr(self.registry, "traces", None)
+        request_id = request.query.get("id")
         if traces is None:
+            if request_id is not None:
+                return _Response.error(
+                    HTTPStatus.NOT_FOUND,
+                    f"no trace with id {request_id!r}",
+                    id=request_id,
+                )
             return _Response.json(HTTPStatus.OK, {"traces": []})
         try:
             n = int(request.query["n"]) if "n" in request.query else None
@@ -457,8 +524,15 @@ class HdcHttpServer:
             n,
             kind=kind,
             model=request.query.get("model"),
-            request_id=request.query.get("id"),
+            request_id=request_id,
         )
+        if request_id is not None and not entries:
+            return _Response.error(
+                HTTPStatus.NOT_FOUND,
+                f"no trace with id {request_id!r} in the ring "
+                "(evicted, or never finished)",
+                id=request_id,
+            )
         return _Response.json(HTTPStatus.OK, {"traces": entries})
 
     async def _profile(self, request: _Request) -> _Response:
@@ -549,9 +623,13 @@ class HdcHttpServer:
             )
 
         loop = asyncio.get_running_loop()
-        # request id minted at the HTTP boundary; one span set per image
-        # (a batch of n fans out to n slot-level traces "rid/i")
-        rid = new_request_id()
+        # cross-hop trace propagation: a sane x-hdc-request-id header is
+        # adopted (the client minted it, so client and server logs share
+        # one id); anything absent or hostile mints locally as before.
+        # One span set per image (a batch of n fans out to "rid/i").
+        rid = adopt_request_id(
+            request.header(protocol.HDR_REQUEST_ID)
+        ) or new_request_id()
         request_ids = (
             [rid] if len(images) == 1
             else [f"{rid}/{i}" for i in range(len(images))]
@@ -601,6 +679,9 @@ class HdcHttpServer:
             response = _Response.json(
                 HTTPStatus.OK, {"labels": [int(l) for l in labels]}
             )
+        # echo the effective id so a client that did not mint one can
+        # still resolve its trace (`/v1/traces?id=`) after the fact
+        response.extra_headers[protocol.HDR_REQUEST_ID] = rid
         response.on_written = self._trace_writer(batcher, futures)
         return response
 

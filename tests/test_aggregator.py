@@ -1,0 +1,465 @@
+"""Fleet observability plane: exact merge, dedup, windows, staleness.
+
+The acceptance contract (ISSUE 9): the aggregator's merged fleet
+histograms are **bit-identical** to `Histogram.merge` over the targets'
+own scrape states (pinned against two live `HdcHttpServer`\\ s over real
+sockets); a client-minted request id resolves at the aggregator with
+pool replica attribution; trace dedup keeps the newest copy; window
+eviction keeps rates exact; a dead target degrades to stale without
+touching the survivors; mismatched histogram layouts refuse to merge.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HDCConfig, HDCModel
+from repro.obs import LatencyHistogram, MetricsWindow, WindowSnapshot
+from repro.obs.aggregator import (
+    AggregatorServer,
+    FleetAggregator,
+    HttpTarget,
+    LocalTarget,
+    render_fleet_prometheus,
+)
+from repro.obs.histogram import log_bounds
+from repro.obs.prometheus import parse_exposition
+from repro.serving import ModelRegistry, ServingEngine
+from repro.serving.metrics import ServingMetrics
+from repro.transport import HdcClient, HdcHttpServer, TransportError
+
+RNG = np.random.default_rng(93)
+
+
+def _cfg(**kw):
+    base = dict(n_features=24, n_classes=4, d=128, levels=16,
+                similarity="hamming")
+    base.update(kw)
+    return HDCConfig(**base)
+
+
+def _trained(cfg, n=32):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return HDCModel.create(cfg).fit(x, y)
+
+
+def _images(cfg, n):
+    return np.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), np.float32)
+
+
+def _serving_state(*, n_requests=0, n_shed=0, queue_depth=0, latencies=()):
+    """A valid `ServingMetrics.state()` payload for scripted targets."""
+    m = ServingMetrics()
+    for s in latencies:
+        m.latency.observe(s)
+    m.n_requests = n_requests
+    m.n_shed = n_shed
+    m.queue_depth = queue_depth
+    return m.state()
+
+
+class _ScriptedTarget:
+    """Scrape target replaying canned payloads (the last one repeats);
+    an Exception entry raises — the dead/garbled-target simulator."""
+
+    def __init__(self, name, scrapes):
+        self.name = name
+        self._scrapes = list(scrapes)
+
+    def scrape(self):
+        item = (
+            self._scrapes.pop(0) if len(self._scrapes) > 1 else self._scrapes[0]
+        )
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        pass
+
+
+@pytest.fixture
+def fleet(request):
+    """N (registry, server) pairs serving the same trained model over
+    real sockets, torn down server-first."""
+    registries, servers, clients = [], [], []
+    cfg = _cfg()
+    model = _trained(cfg)
+
+    def build(n=2, *, replicas=()):
+        for i in range(n):
+            registry = ModelRegistry()
+            reps = replicas[i] if i < len(replicas) else 1
+            engines = [ServingEngine(model, batch_size=8) for _ in range(reps)]
+            if reps == 1:
+                registry.register("m", engines[0], start=True, max_delay_ms=0.5)
+            else:
+                registry.register_pool("m", engines, start=True,
+                                       max_delay_ms=0.5)
+            server = HdcHttpServer(registry).start()
+            client = HdcClient(*server.address)
+            registries.append(registry)
+            servers.append(server)
+            clients.append(client)
+        return cfg, registries, servers, clients
+
+    yield build
+    for client in clients:
+        client.close()
+    for server in servers:
+        server.stop()
+    for registry in registries:
+        registry.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: exact merge over live sockets, cross-hop trace resolution
+# ---------------------------------------------------------------------------
+
+def test_merged_histograms_bit_identical_over_live_sockets(fleet):
+    """Two live `HdcHttpServer`s; the aggregator's merged state must
+    equal a manual from_state+merge of the targets' own scrapes —
+    bucket for bucket, counter for counter."""
+    cfg, _, servers, clients = fleet(2)
+    images = _images(cfg, 24)
+    clients[0].predict_batch("m", images)
+    clients[1].predict_batch("m", images[:8])
+    clients[1].predict_batch("m", images[8:14])
+
+    agg = FleetAggregator(
+        [HttpTarget(*s.address, name=f"t{i}") for i, s in enumerate(servers)],
+        interval_s=0.1,
+    )
+    try:
+        summary = agg.scrape_once()
+        assert all(v["ok"] for v in summary.values()), summary
+
+        state_a = clients[0].metrics_state()["m"]["serving"]
+        state_b = clients[1].metrics_state()["m"]["serving"]
+        manual = ServingMetrics.from_state(state_a).merge(
+            ServingMetrics.from_state(state_b)
+        )
+        assert agg.merged_state()["m"]["serving"] == manual.state()
+
+        # and the buckets really are the per-target sums
+        ha = LatencyHistogram.from_state(state_a["latency"])
+        hb = LatencyHistogram.from_state(state_b["latency"])
+        merged = agg.merged_metrics()["m"].latency
+        assert merged.bucket_counts() == [
+            a + b for a, b in zip(ha.bucket_counts(), hb.bucket_counts())
+        ]
+        assert merged.count == ha.count + hb.count == 24 + 8 + 6
+    finally:
+        agg.stop()
+
+
+def test_cross_hop_id_resolves_at_aggregator_with_replica(fleet):
+    """client -> x-hdc-request-id header -> pool dispatch -> trace ring
+    -> scrape -> the aggregator names the replica that served it."""
+    cfg, registries, servers, clients = fleet(1, replicas=(2,))
+    images = _images(cfg, 8)
+    clients[0].predict_batch("m", images)  # warm both replicas
+    clients[0].predict(name="m", image=images[0], request_id="req-tracked")
+    assert clients[0].last_request_id == "req-tracked"
+
+    agg = FleetAggregator(
+        [HttpTarget(*servers[0].address, name="pool")], interval_s=0.1
+    )
+    try:
+        agg.scrape_once()
+        entry = agg.trace_by_id("req-tracked")
+        assert entry is not None
+        assert entry["target"] == "pool" and entry["model"] == "m"
+        assert entry["replica"] in (0, 1)
+        assert entry["spans"].keys() == {
+            "queue_ms", "assembly_ms", "device_ms", "write_ms"
+        }
+        # the pool counted both dispatches (one per submit/submit_block)
+        assert sum(registries[0].describe_entry("m")["n_dispatched"]) == 2
+        assert agg.trace_by_id("req-nope") is None
+    finally:
+        agg.stop()
+
+
+def test_local_and_http_targets_scrape_identically(fleet):
+    """A LocalTarget over the registry and an HttpTarget over its server
+    pull through the same `metrics_state()` code path — same bytes."""
+    cfg, registries, servers, clients = fleet(1)
+    clients[0].predict_batch("m", _images(cfg, 10))
+    local = LocalTarget(registries[0]).scrape()
+    remote = HttpTarget(*servers[0].address).scrape()
+    assert local["metrics"] == remote["metrics"]
+    assert [t["id"] for t in local["traces"] if t.get("id")] == [
+        t["id"] for t in remote["traces"] if t.get("id")
+    ]
+
+
+# ---------------------------------------------------------------------------
+# trace dedup: newest wins, bounded ring
+# ---------------------------------------------------------------------------
+
+def test_trace_dedup_keeps_newest_copy():
+    metrics = {"m": {"serving": _serving_state(n_requests=1)}}
+    old = {"id": "req-1", "kind": "request", "model": "m", "e2e_ms": 1.0}
+    new = {"id": "req-1", "kind": "request", "model": "m", "e2e_ms": 9.0}
+    target = _ScriptedTarget("t", [
+        {"metrics": metrics, "traces": [old]},
+        {"metrics": metrics, "traces": [new]},
+    ])
+    agg = FleetAggregator([target], interval_s=0.01)
+    agg.scrape_once()
+    agg.scrape_once()
+    entries = agg.traces(kind="request")
+    assert len(entries) == 1  # re-scraped id did not duplicate
+    assert entries[0]["e2e_ms"] == 9.0  # and kept the NEWEST copy
+    assert entries[0]["target"] == "t"
+
+
+def test_trace_events_dedup_per_target_and_ring_is_bounded():
+    metrics = {"m": {"serving": _serving_state()}}
+
+    def ev(seq):
+        return {"kind": "event", "seq": seq, "event": "promote"}
+
+    a = _ScriptedTarget("a", [{"metrics": metrics, "traces": [ev(0), ev(1)]}])
+    b = _ScriptedTarget("b", [{"metrics": metrics, "traces": [ev(0)]}])
+    agg = FleetAggregator([a, b], interval_s=0.01, trace_capacity=2)
+    agg.scrape_once()
+    agg.scrape_once()  # re-scrape: same (target, seq) keys, no growth
+    entries = agg.traces(kind="event")
+    # capacity 2 evicted the oldest of the 3 distinct events; b's seq 0
+    # never collided with a's seq 0 (events key per-target)
+    assert len(entries) == 2
+    assert {e["target"] for e in entries} == {"a", "b"}
+
+
+def test_duplicate_target_names_rejected():
+    t = _ScriptedTarget("x", [{"metrics": {}, "traces": []}])
+    u = _ScriptedTarget("x", [{"metrics": {}, "traces": []}])
+    with pytest.raises(ValueError, match="duplicate target names"):
+        FleetAggregator([t, u])
+
+
+# ---------------------------------------------------------------------------
+# staleness: a dead or garbled target degrades, never crashes the plane
+# ---------------------------------------------------------------------------
+
+def test_dead_target_goes_stale_survivors_unaffected():
+    ok = {"metrics": {"m": {"serving": _serving_state(n_requests=7)}},
+          "traces": []}
+    live = _ScriptedTarget("live", [ok])
+    dead = _ScriptedTarget("dead", [
+        {"metrics": {"m": {"serving": _serving_state(n_requests=5)}},
+         "traces": []},
+        ConnectionRefusedError("boom"),
+    ])
+    agg = FleetAggregator([live, dead], interval_s=0.01, stale_after_s=0.05)
+    agg.scrape_once()  # both healthy
+    assert agg.fleet()["n_stale"] == 0
+    time.sleep(0.06)
+    summary = agg.scrape_once()  # dead now raises; the cycle survives
+    assert summary["dead"]["ok"] is False
+    assert "ConnectionRefusedError" in summary["dead"]["error"]
+
+    by_name = {t["name"]: t for t in agg.fleet()["targets"]}
+    assert by_name["dead"]["stale"] and not by_name["live"]["stale"]
+    assert by_name["dead"]["last_error"]
+    assert by_name["live"]["last_error"] is None
+    # the dead target's last-good cumulative counters remain true totals
+    # and stay in the merge; the survivor is untouched
+    assert agg.merged_metrics()["m"].n_requests == 7 + 5
+
+
+def test_garbled_scrape_never_replaces_last_good_state():
+    good = _serving_state(n_requests=3, latencies=[0.01, 0.02])
+    garbled = dict(good, latency=dict(good["latency"], count=999))
+    target = _ScriptedTarget("t", [
+        {"metrics": {"m": {"serving": good}}, "traces": []},
+        {"metrics": {"m": {"serving": garbled}}, "traces": []},
+    ])
+    agg = FleetAggregator([target], interval_s=0.01)
+    agg.scrape_once()
+    summary = agg.scrape_once()  # validation rejects before committing
+    assert summary["t"]["ok"] is False
+    assert "999" in summary["t"]["error"]
+    assert agg.merged_state()["m"]["serving"] == good  # last good, intact
+    state = agg.fleet()["targets"][0]
+    assert state["n_errors"] == 1 and state["n_scrapes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# merge edge cases: mismatched layouts refuse loudly
+# ---------------------------------------------------------------------------
+
+def test_mismatched_bucket_layouts_refuse_to_merge():
+    a = LatencyHistogram()
+    b = LatencyHistogram(log_bounds(1e-3, 1.0, per_decade=4))
+    with pytest.raises(ValueError, match="different bucket bounds"):
+        a.merge(b)
+
+    state = a.state()
+    state["counts"] = state["counts"][:-1]  # wrong arity
+    with pytest.raises(ValueError, match="counts"):
+        LatencyHistogram.from_state(state)
+
+    state = a.state()
+    state["count"] = 12  # disagrees with the (empty) buckets
+    with pytest.raises(ValueError, match="bucket sum"):
+        LatencyHistogram.from_state(state)
+
+    with pytest.raises(ValueError, match="malformed"):
+        ServingMetrics.from_state({"nope": 1})
+
+
+# ---------------------------------------------------------------------------
+# windows: rates stay exact across eviction
+# ---------------------------------------------------------------------------
+
+def test_window_eviction_keeps_rates_exact():
+    """Cumulative snapshots at a constant 10 req/s; after the deque
+    evicts most of the history the derived rate is still exactly 10 —
+    first-to-last deltas cannot lose evicted intervals."""
+    w = MetricsWindow(capacity=4)
+    for t in range(12):
+        w.append(WindowSnapshot(
+            float(t), n_requests=10 * t, n_shed=2 * t, queue_depth=5,
+            n_observed=10 * t, n_over_slo=t,
+        ))
+    assert len(w) == 4 and w.n_appended == 12  # eviction really happened
+    s = w.series()
+    assert s["n_snapshots"] == 4 and s["span_s"] == 3.0
+    assert s["request_rate_rps"] == 10.0
+    assert s["shed_rate_rps"] == 2.0
+    assert s["shed_fraction"] == pytest.approx(2 / 12)
+    assert s["slo_burn"] == pytest.approx(0.1)
+    assert s["queue_depth_dps"] == 0.0  # flat gauge: zero slope
+
+
+def test_window_refuses_non_increasing_time():
+    w = MetricsWindow(capacity=4)
+    w.append(WindowSnapshot(1.0, n_requests=0, n_shed=0, queue_depth=0))
+    with pytest.raises(ValueError, match="not after"):
+        w.append(WindowSnapshot(1.0, n_requests=1, n_shed=0, queue_depth=0))
+    s = w.series()  # single snapshot: Nones, never NaN
+    assert s["n_snapshots"] == 1 and s["request_rate_rps"] is None
+
+
+def test_aggregator_appends_windows_per_cycle():
+    states = [
+        {"metrics": {"m": {"serving": _serving_state(n_requests=n)}},
+         "traces": []}
+        for n in (10, 20, 30)
+    ]
+    target = _ScriptedTarget("t", states)
+    agg = FleetAggregator([target], interval_s=0.01)
+    for _ in range(3):
+        agg.scrape_once()
+        time.sleep(0.002)  # strictly-increasing window timestamps
+    series = agg.windows()["m"]
+    assert series["n_snapshots"] == 3
+    # 20 requests accumulated first-to-last across the window
+    assert series["request_rate_rps"] * series["span_s"] == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------------------
+# the aggregator's own HTTP endpoint
+# ---------------------------------------------------------------------------
+
+def test_aggregator_server_routes_end_to_end():
+    hostile = 'fleet"model\\with\nnewline'
+    target = _ScriptedTarget("t", [{
+        "metrics": {hostile: {"serving": _serving_state(
+            n_requests=4, latencies=[0.001, 0.002, 0.004, 0.008],
+        )}},
+        "traces": [{"id": "req-hit", "kind": "request", "model": hostile,
+                    "e2e_ms": 1.0}],
+    }])
+    agg = FleetAggregator([target], interval_s=0.01)
+    agg.scrape_once()
+    server = AggregatorServer(agg).start()
+    client = HdcClient(*server.address)
+    try:
+        health = client.healthz()
+        assert health["status"] == "ok" and health["n_targets"] == 1
+
+        # JSON metrics carry the windowed series alongside the snapshot
+        snap = client.metrics()[hostile]
+        assert snap["n_requests"] == 4 and "window" in snap
+
+        # ?detail=state is the exact merged form (second-tier scrape)
+        assert client.metrics_state() == agg.merged_state()
+
+        # trace hit resolves fleet-wide; miss is a 404, not an empty 200
+        (entry,) = client.traces(request_id="req-hit")
+        assert entry["id"] == "req-hit" and entry["target"] == "t"
+        with pytest.raises(TransportError) as exc:
+            client.traces(request_id="req-miss")
+        assert exc.value.status == 404
+        assert "req-miss" in str(exc.value)
+
+        # fleet view over HTTP
+        fleet = client._json("GET", "/v1/fleet")
+        assert fleet["n_targets"] == 1 and fleet["n_traces"] == 1
+        assert fleet["targets"][0]["models"] == [hostile]
+
+        # Prometheus exposition survives the strict parse even with a
+        # hostile model name; HELP/TYPE once per family is enforced by
+        # parse_exposition itself
+        types, _, samples = parse_exposition(client.metrics(prometheus=True))
+        assert types["uhd_requests_total"] == "counter"
+        labelled = [ls for n, ls, _ in samples if n == "uhd_requests_total"]
+        assert {"model": hostile} in labelled
+
+        # read-only plane: anything but GET is 405
+        with pytest.raises(TransportError) as exc:
+            client._json("POST", "/metrics", b"{}")
+        assert exc.value.status == 405
+
+        with pytest.raises(TransportError) as exc:
+            client._json("GET", "/v1/traces?kind=bogus")
+        assert exc.value.status == 400
+    finally:
+        client.close()
+        server.stop()
+        agg.stop()
+
+
+def test_fleet_prometheus_families_render():
+    target = _ScriptedTarget("t", [{
+        "metrics": {"m": {
+            "serving": _serving_state(n_requests=2, latencies=[0.01, 0.02]),
+            "online_metrics": ServingMetrics().state(),
+        }},
+        "traces": [],
+    }])
+    agg = FleetAggregator([target], interval_s=0.01)
+    agg.scrape_once()
+    types, helps, samples = parse_exposition(render_fleet_prometheus(agg))
+    names = {n for n, _, _ in samples}
+    assert "uhd_fleet_target_up" in names
+    assert "uhd_fleet_scrape_cycles_total" in names
+    assert types["uhd_online_stage_latency_seconds"] == "histogram"
+    up = [v for n, ls, v in samples
+          if n == "uhd_fleet_target_up" and ls == {"target": "t"}]
+    assert up == [1.0]
+
+
+def test_background_scrape_thread_lifecycle():
+    target = _ScriptedTarget("t", [
+        {"metrics": {"m": {"serving": _serving_state(n_requests=1)}},
+         "traces": []},
+    ])
+    agg = FleetAggregator([target], interval_s=0.01).start()
+    assert agg.running()
+    deadline = time.time() + 30.0
+    while agg.fleet()["n_cycles"] < 3:
+        assert time.time() < deadline, "scrape thread made no progress"
+        time.sleep(0.005)
+    agg.stop()
+    assert not agg.running()
+    cycles = agg.fleet()["n_cycles"]
+    time.sleep(0.05)
+    assert agg.fleet()["n_cycles"] == cycles  # really stopped

@@ -553,7 +553,7 @@ def test_check_regression_fails_on_missing_metric_or_artifact(tmp_path):
 def test_check_regression_update_baseline_roundtrip(tmp_path):
     art = tmp_path / "bench"
     art.mkdir()
-    # synthesize all five artifacts with just the gated paths present
+    # synthesize all six artifacts with just the gated paths present
     payloads = {
         "BENCH_train": {"summary": {"fused_img_per_s": 100.0, "speedup": 2.0}},
         "BENCH_serve": {"encoders": {
@@ -571,6 +571,9 @@ def test_check_regression_update_baseline_roundtrip(tmp_path):
         },
         "BENCH_online": {"ingest_eps": 5000.0, "publish_to_promote_ms": 50.0,
                          "predict_p99_ms_active": 30.0},
+        "BENCH_obs": {"scrape_cycle": {"p50_ms": 15.0},
+                      "merge": {"p50_ms": 1.0},
+                      "staleness_detect_ms": 250.0},
     }
     for name, payload in payloads.items():
         (art / f"{name}.json").write_text(json.dumps(payload))
@@ -617,3 +620,66 @@ def test_render_prometheus_escapes_label_values():
         registry.shutdown()
     assert 'model="we\\"ird\\nname"' in text
     assert "\n# TYPE uhd_queue_depth gauge\n" in text
+
+
+def test_help_and_type_emitted_once_per_family_under_replica_split():
+    """A pool entry and a single entry share every uhd_* family; the
+    Writer must group samples so HELP/TYPE appear exactly once per
+    family no matter how many models/replicas contribute (ISSUE 9
+    satellite — duplicate headers are rejected by real scrapers)."""
+    from repro.obs.prometheus import parse_exposition
+
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry = ModelRegistry()
+    registry.register_pool(
+        "pooled", [ServingEngine(model, batch_size=4) for _ in range(2)]
+    )
+    registry.register("solo", ServingEngine(model, batch_size=4))
+    try:
+        text = render_prometheus(registry)
+    finally:
+        registry.shutdown()
+    # parse_exposition raises on any duplicated HELP/TYPE; also pin the
+    # literal line counts so the audit cannot rot
+    types, helps, samples = parse_exposition(text)
+    for family in ("uhd_requests_total", "uhd_queue_depth",
+                   "uhd_request_latency_seconds"):
+        assert text.count(f"# TYPE {family} ") == 1
+        assert text.count(f"# HELP {family} ") == 1
+        assert family in types and family in helps
+    # both models sampled into the shared families
+    models = {ls["model"] for n, ls, _ in samples if n == "uhd_queue_depth"}
+    assert models == {"pooled", "solo"}
+
+
+def test_exposition_roundtrip_with_hostile_model_name():
+    r"""Backslash, quote, and newline in a label value must escape on
+    the way out and unescape to the exact original on the way back —
+    the full 0.0.4 escaping triple, not just quotes."""
+    from repro.obs.prometheus import Writer, parse_exposition
+
+    hostile = 'evil\\model"with\nall three'
+    w = Writer()
+    w.sample("uhd_queue_depth", {"model": hostile}, 3,
+             help='queued\nnow "really"')
+    text = w.render()
+    assert 'model="evil\\\\model\\"with\\nall three"' in text
+    types, helps, samples = parse_exposition(text)
+    [(name, labels, value)] = samples
+    assert labels == {"model": hostile} and value == 3.0
+    # HELP escapes backslash+newline only; quotes stay literal
+    assert helps["uhd_queue_depth"] == 'queued\nnow "really"'
+
+
+def test_parse_exposition_rejects_duplicates_and_malformed():
+    from repro.obs.prometheus import parse_exposition
+
+    with pytest.raises(ValueError, match="duplicate TYPE"):
+        parse_exposition("# TYPE a counter\n# TYPE a gauge\na 1\n")
+    with pytest.raises(ValueError, match="duplicate HELP"):
+        parse_exposition("# HELP a x\n# HELP a y\na 1\n")
+    with pytest.raises(ValueError, match="value"):
+        parse_exposition("a notanumber\n")
+    with pytest.raises(ValueError, match="label"):
+        parse_exposition('a{model="unterminated} 1\n')

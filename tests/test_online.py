@@ -536,3 +536,68 @@ def test_checkpoint_retention_keep_n_zero_keeps_everything(tmp_path):
     mgr.save(5, {"a": np.arange(2)})
     assert mgr.all_steps() == [0, 1, 2, 3, 4, 5]
     assert (tmp_path / "step_000000000.tmp").exists()  # nothing pruned
+
+
+# ---------------------------------------------------------------------------
+# observability: the learner's pipeline is instrumented like serving's
+# ---------------------------------------------------------------------------
+
+def test_learner_stage_instrumentation_and_fleet_state(tmp_path):
+    """ingest -> train -> publish each land in a mergeable histogram;
+    the feedback->publish cycle latency is observed; the registry's
+    scrape state carries the exact-bucket online form; the exposition
+    renders the online families (ISSUE 9 satellite)."""
+    from repro.obs import render_prometheus
+    from repro.obs.prometheus import parse_exposition
+    from repro.online.learner import ONLINE_STAGES
+    from repro.serving.metrics import ServingMetrics
+
+    cfg = _cfg()
+    base = _trained(cfg)
+    base.save(tmp_path / "ckpt", step=0)
+    registry = ModelRegistry()
+    registry.register_checkpoint("m", tmp_path / "ckpt", batch_size=8,
+                                 start=True)
+    learner = OnlineLearner(
+        registry, "m", train_batch=16, publish_every_s=0.05,
+        poll_interval_s=0.01,
+    ).start()
+    feed_x, feed_y = _feed(cfg, 32)
+    assert learner.submit(feed_x, feed_y)
+    _wait(lambda: learner.snapshot()["n_published"] >= 1)
+    learner.stop()
+
+    for stage in ONLINE_STAGES:
+        assert learner.metrics.stage[stage].count >= 1, stage
+    # the cycle latency covers ingest wait: >= the publish stage alone
+    assert learner.metrics.latency.count >= 1
+    assert (learner.metrics.latency.sum_s
+            >= learner.metrics.stage["publish"].sum_s)
+
+    snap = learner.snapshot()
+    assert set(snap["stages"]) == set(ONLINE_STAGES)
+    assert snap["stages"]["train"]["count"] >= 1
+    assert snap["feedback_to_publish"]["count"] >= 1
+
+    # the publish lifecycle event carries the per-stage span breakdown
+    publishes = [t for t in registry.traces.snapshot(64)
+                 if t.get("kind") == "event" and t.get("event") == "publish"]
+    assert publishes
+    assert set(publishes[-1]["spans"]) == {f"{s}_ms" for s in ONLINE_STAGES}
+
+    # scrape state: exact-bucket online form reconstructs bit-identically
+    entry = registry.metrics_state()["m"]
+    assert "online" in entry
+    rebuilt = ServingMetrics.from_state(entry["online_metrics"])
+    for stage in ONLINE_STAGES:
+        assert (rebuilt.stage[stage].bucket_counts()
+                == learner.metrics.stage[stage].bucket_counts())
+
+    # the exposition renders the online families, audit-clean
+    types, _, samples = parse_exposition(render_prometheus(registry))
+    assert types["uhd_online_stage_latency_seconds"] == "histogram"
+    assert types["uhd_online_feedback_to_publish_seconds"] == "histogram"
+    stages_seen = {ls["stage"] for n, ls, _ in samples
+                   if n == "uhd_online_stage_latency_seconds_count"}
+    assert stages_seen == set(ONLINE_STAGES)
+    registry.shutdown()

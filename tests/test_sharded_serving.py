@@ -555,7 +555,12 @@ def test_http_traces_id_filter():
         rid = all_traces[-1]["id"]
         (hit,) = client.traces(request_id=rid)
         assert hit["id"] == rid
-        assert client.traces(request_id="req-nope") == []
+        # unknown id: 404 with a JSON error body, not an empty 200 list
+        from repro.transport.client import TransportError
+        with pytest.raises(TransportError) as exc:
+            client.traces(request_id="req-nope")
+        assert exc.value.status == 404
+        assert "req-nope" in str(exc.value)
     finally:
         client.close()
         server.stop()
