@@ -19,7 +19,7 @@ Usage::
 
     python -m benchmarks.check_regression                  # gate (CI step)
     python -m benchmarks.check_regression --update-baseline
-        # rewrite baselines.json from the current artifacts (run the six
+        # rewrite baselines.json from the current artifacts (run the
         # --fast benchmarks first); commit the result when a perf change
         # is intentional
     python -m benchmarks.check_regression --artifacts DIR --baseline FILE
@@ -90,6 +90,12 @@ SPECS: dict[str, list[tuple[str, str, float]]] = {
         ("scrape_cycle.p50_ms", LOWER, 6 * TOL_LATENCY),
         ("merge.p50_ms", LOWER, 6 * TOL_LATENCY),
         ("staleness_detect_ms", LOWER, 6 * TOL_LATENCY),
+    ],
+    "BENCH_search": [
+        # top-k associative search (DESIGN.md §14): queries/s at the
+        # largest swept store and serving-shape per-call p99
+        ("summary.queries_per_s", HIGHER, 3 * TOL_THROUGHPUT),
+        ("summary.p99_ms", LOWER, 6 * TOL_LATENCY),
     ],
 }
 

@@ -1,0 +1,168 @@
+"""Top-k associative search benchmark: queries/s vs store size + roofline.
+
+The search primitive (DESIGN.md §14) is one streaming pass over the
+packed store: per query, XOR + popcount across all C rows (C x W x 4
+bytes touched) with a running k-best — so at large C it is memory-bound
+and the honest yardstick is bytes/s against a memcpy roofline, exactly
+like the packed-predict path it generalizes.  Two questions:
+
+  1. **throughput vs store size** — queries/s and effective bytes/s
+     sweeping C from thousands to ~1M rows at fixed D and k, on the
+     platform's serving impl (Pallas kernel on TPU, the tiled pure-JAX
+     scan elsewhere), each point a median over repeated blocked calls;
+  2. **serving-shape latency** — per-call p50/p99 at the batcher's
+     steady-state shape (one (B, k) compile, store resident), the number
+     the `:search` route's device stage inherits.
+
+Emits BENCH_search.json (artifacts/bench/), gated on
+``summary.queries_per_s`` and ``summary.p99_ms`` by
+`benchmarks.check_regression` and uploaded by CI alongside the other
+BENCH_* artifacts.  ``--fast`` shrinks D and the sweep for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, save_artifact, table
+from repro.core import unary
+
+
+def _impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _topk(impl):
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.hamming_topk
+    from repro.kernels import ref as kref
+
+    return kref.hamming_topk
+
+
+def _store(rng, rows: int, d: int) -> jax.Array:
+    w = unary.n_words(d)
+    c = rng.integers(0, 1 << 32, (rows, w), dtype=np.uint32)
+    if d % 32:
+        c[:, -1] &= np.uint32((1 << (d % 32)) - 1)
+    return jnp.asarray(c)
+
+
+def _memcpy_roofline_gbps(nbytes: int) -> float:
+    """Host memcpy proxy: GB/s copying a buffer of the store's size —
+    the ceiling a one-pass scan of that store cannot beat."""
+    src = np.empty(max(nbytes, 1 << 20), dtype=np.uint8)
+    src[:] = 7
+    t = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        np.copyto(np.empty_like(src), src)
+        t.append(time.perf_counter() - t0)
+    return src.nbytes / min(t) / 1e9
+
+
+def run(fast: bool = False) -> dict:
+    d = 2048 if fast else 8192
+    b = 64
+    k = 10
+    sweep = [1024, 8192, 32768] if fast else [4096, 65536, 262144, 1048576]
+    iters = 3 if fast else 5
+    lat_calls = 30 if fast else 100
+
+    impl = _impl()
+    topk = _topk(impl)
+    rng = np.random.default_rng(14)
+    w = unary.n_words(d)
+    q = _store(rng, b, d)
+
+    fn = jax.jit(topk, static_argnames=("d", "k"))
+    out: dict = {
+        "impl": impl, "platform": jax.default_backend(),
+        "d": d, "batch": b, "k": k, "word_bytes": 4 * w,
+    }
+
+    rows_out = []
+    for rows in sweep:
+        store = _store(rng, rows, d)
+        store_bytes = rows * w * 4
+        s = bench(lambda: fn(q, store, d=d, k=k), iters=iters)
+        qps = b / s
+        # bytes the scan must touch per call: every query reads the
+        # whole store once
+        gbps = b * store_bytes / s / 1e9
+        rows_out.append({
+            "rows": rows,
+            "store_mib": store_bytes / (1 << 20),
+            "s_per_call": s,
+            "queries_per_s": qps,
+            "scan_gb_per_s": gbps,
+        })
+    out["sweep"] = rows_out
+
+    # roofline at the largest swept store
+    biggest = rows_out[-1]
+    out["memcpy_gb_per_s"] = _memcpy_roofline_gbps(sweep[-1] * w * 4)
+    out["roofline_fraction"] = biggest["scan_gb_per_s"] / out["memcpy_gb_per_s"]
+
+    # serving-shape latency: store resident, one compiled (B, k) shape
+    store = _store(rng, sweep[0], d)
+    jax.block_until_ready(fn(q, store, d=d, k=k))  # compile outside timing
+    lat_ms = []
+    for _ in range(lat_calls):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q, store, d=d, k=k))
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+    arr = np.sort(np.asarray(lat_ms))
+    out["latency"] = {
+        "rows": sweep[0],
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+    }
+
+    # the gated headline numbers
+    out["summary"] = {
+        "queries_per_s": biggest["queries_per_s"],
+        "p99_ms": out["latency"]["p99_ms"],
+    }
+
+    table(
+        f"hamming top-k ({impl}, D={d}, B={b}, k={k})",
+        ["rows", "store MiB", "queries/s", "scan GB/s"],
+        [
+            [r["rows"], f"{r['store_mib']:.1f}",
+             f"{r['queries_per_s']:.1f}", f"{r['scan_gb_per_s']:.2f}"]
+            for r in rows_out
+        ],
+    )
+    table(
+        "roofline + serving-shape latency",
+        ["metric", "value"],
+        [
+            ["memcpy GB/s", f"{out['memcpy_gb_per_s']:.2f}"],
+            ["scan / memcpy", f"{out['roofline_fraction']:.3f}"],
+            [f"p50 ms ({sweep[0]} rows)", f"{out['latency']['p50_ms']:.2f}"],
+            [f"p99 ms ({sweep[0]} rows)", f"{out['latency']['p99_ms']:.2f}"],
+        ],
+    )
+    save_artifact("BENCH_search", out)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,7 +9,10 @@ and `HDCModel` (codebooks + class-hypervector state as one pytree, with
 
 Next steps: `examples/serve_http.py` puts a trained model behind HTTP;
 `examples/online_learning.py` keeps it learning from labeled feedback
-traffic after deployment (DESIGN.md §10).
+traffic after deployment (DESIGN.md §10); `examples/vector_search.py`
+runs the same packed store as a top-k associative memory — classify is
+its k=1 case — through `search_packed` and `ItemMemory` (DESIGN.md
+§14).
 
 Observability: once serving, the same server exposes `/metrics` (JSON,
 or Prometheus text with `Accept: text/plain`) and `/v1/traces` — a

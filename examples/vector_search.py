@@ -1,0 +1,87 @@
+"""Vector search: the uHD store as an associative memory (DESIGN.md §14).
+
+Classification is the k=1 special case of retrieval: the packed class
+words are just a tiny item memory. This example runs the same top-k
+primitive at both scales —
+
+  1. `search_packed` over a trained model's class words: k=1 recovers
+     `predict`'s labels bit-for-bit, k=3 adds runner-up classes with
+     exact Hamming distances (a free confidence signal);
+  2. `ItemMemory`: a growable store of packed hypervectors with
+     add/delete/search — nearest-neighbor lookup and dedup over many
+     thousands of rows, same XOR+popcount scan, same pinned
+     (distance, index) ordering.
+
+    PYTHONPATH=src python examples/vector_search.py
+
+Serving: the same primitive runs behind
+``POST /v1/models/{name}:search`` (see `examples/serve_http.py` for the
+server setup; `HdcClient.search(name, queries, k)` is the client call).
+`benchmarks/search_bench.py` sweeps the store to ~1M rows.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    HDCConfig,
+    HDCModel,
+    ItemMemory,
+    search_packed,
+)
+from repro.data import load_dataset  # noqa: E402
+
+rng = np.random.default_rng(0)
+
+# 1. classify-as-search: the class words are a C-row item memory -------------
+ds = load_dataset("mnist", n_train=2048, n_test=64)
+cfg = HDCConfig(n_features=ds.n_features, n_classes=ds.n_classes, d=4096)
+model = HDCModel.create(cfg).fit(ds.train_images, ds.train_labels)
+class_words = model.pack()  # the pack-once serving artifact
+
+queries = ds.test_images[:8]
+labels = np.asarray(model.predict(queries))
+indices, distances = search_packed(
+    model, jnp.asarray(queries), class_words, k=3
+)
+indices, distances = np.asarray(indices), np.asarray(distances)
+assert (indices[:, 0] == labels).all()  # k=1 IS predict
+
+print("query  label  top-3 classes  hamming distances  margin")
+for i in range(len(queries)):
+    margin = distances[i, 1] - distances[i, 0]
+    print(f"  {i}      {labels[i]}     {indices[i].tolist()}      "
+          f"{distances[i].tolist()}      {margin}")
+
+# 2. ItemMemory: the same scan over a big mutable store ----------------------
+d = 1024
+memory = ItemMemory(d)
+items = np.sign(rng.standard_normal((5000, d))).astype(np.float32)
+memory.add(items)
+print(f"\nitem memory: {len(memory)} rows, {memory.nbytes / 1024:.0f} KiB "
+      f"packed ({d} dims -> {memory.n_words} words/row)")
+
+# exact self-retrieval: every stored row is its own nearest neighbor
+idx, dist = memory.search(items[:4], k=2)
+assert (idx[:, 0] == np.arange(4)).all() and (dist[:, 0] == 0).all()
+print("self-lookup:", idx[:, 0].tolist(), "at distance", dist[:, 0].tolist())
+
+# near-duplicate detection: flip 1% of one row's dims and search for it
+noisy = items[7].copy()
+flips = rng.choice(d, d // 100, replace=False)
+noisy[flips] = -noisy[flips]
+idx, dist = memory.search(noisy[None], k=3)
+print(f"1%-noisy copy of row 7 -> nearest rows {idx[0].tolist()} "
+      f"at distances {dist[0].tolist()}")
+assert idx[0, 0] == 7 and dist[0, 0] == d // 100
+
+# delete shifts positions: rows after the deleted one move left
+memory.delete([0, 1, 2])
+idx, _ = memory.search(items[7][None], k=1)
+print(f"after deleting rows 0-2, old row 7 is found at position {idx[0, 0]}")
+assert idx[0, 0] == 4

@@ -20,7 +20,12 @@ from repro.core.model import (  # noqa: F401
     baseline_iterative_search,
     train_and_eval,
 )
-from repro.core.hdc_model import HDCModel, partial_fit_sharded  # noqa: F401
+from repro.core.hdc_model import (  # noqa: F401
+    HDCModel,
+    partial_fit_sharded,
+    search_packed,
+)
+from repro.core.item_memory import ItemMemory  # noqa: F401
 from repro.core.registry import (  # noqa: F401
     BackendUnavailableError,
     Encoder,
@@ -31,6 +36,7 @@ from repro.core.registry import (  # noqa: F401
     register_backend,
     register_encoder,
     register_fit_bundle,
+    register_topk,
     resolve_backend,
 )
 from repro.core import encoders as _builtin_encoders  # noqa: F401  (registers)

@@ -40,6 +40,7 @@ from repro.core.registry import (
     register_encoder,
     register_encode_slice,
     register_fit_bundle,
+    register_topk,
 )
 
 if TYPE_CHECKING:
@@ -185,6 +186,14 @@ def _uhd_pallas_fit_bundle(cfg, books, x_q, labels, *, d, point_offset):
     return ops.fit_bundle(x_q, books["sobol"], labels, cfg.n_classes)
 
 
+@register_topk("uhd", "pallas")
+def _uhd_pallas_topk(q_words, c_words, d, k):
+    """Streaming packed-Hamming top-k kernel (running k-best per tile)."""
+    from repro.kernels import ops  # local import: kernels are optional
+
+    return ops.hamming_topk(q_words, c_words, d, k)
+
+
 # ---------------------------------------------------------------------------
 # uHD dynamic: table-free Sobol generation (the paper's headline theme)
 # ---------------------------------------------------------------------------
@@ -287,6 +296,15 @@ def _uhd_dynamic_pallas_fit_bundle(cfg, books, x_q, labels, *, d, point_offset):
     return ops.fit_bundle_dynamic(
         x_q, books["direction"], labels, cfg.n_classes, d, skip=skip
     )
+
+
+@register_topk("uhd_dynamic", "pallas")
+def _uhd_dynamic_pallas_topk(q_words, c_words, d, k):
+    """Streaming packed-Hamming top-k kernel (packed rows are
+    encoder-agnostic, so this is the same kernel as the table form)."""
+    from repro.kernels import ops  # local import: kernels are optional
+
+    return ops.hamming_topk(q_words, c_words, d, k)
 
 
 # ---------------------------------------------------------------------------

@@ -667,6 +667,28 @@ def _packed_similarity(
     raise ValueError(f"unknown packed-similarity impl {impl!r}")
 
 
+def _packed_topk(
+    q_words: jax.Array, c_words: jax.Array, d: int, k: int, impl: str
+) -> tuple[jax.Array, jax.Array]:
+    """Scored top-k over packed rows via the named implementation.
+
+    (B, W) x (C, W) uint32 -> ((B, k) int32 indices, (B, k) int32
+    Hamming distances), each row ascending by (distance, index) with
+    the **lowest index winning ties** (DESIGN.md §14).  "jnp" is the
+    tiled pure-JAX scan; "pallas" the streaming kernel — both
+    bit-identical to `repro.kernels.ref.hamming_topk_oracle`.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.hamming_topk(q_words, c_words, d, k)
+    if impl == "jnp":
+        from repro.kernels import ref as kref  # pure jnp; always importable
+
+        return kref.hamming_topk(q_words, c_words, d, k)
+    raise ValueError(f"unknown packed top-k impl {impl!r}")
+
+
 @jax.jit
 def predict(model: HDCModel, images: jax.Array) -> jax.Array:
     """Encode queries, score against class HVs, argmax."""
@@ -692,22 +714,47 @@ def predict_packed(
     *,
     impl: str = "jnp",
 ) -> jax.Array:
-    """Serving fast path: encode -> pack -> XOR+popcount -> argmax.
+    """Serving fast path: encode -> pack -> XOR+popcount -> nearest class.
 
     `class_words` is the pack-once artifact from :meth:`HDCModel.pack`,
-    so per-request work never touches the (C, D) class sums.  The
-    predicted labels are bit-identical to `predict` with
-    ``similarity="hamming"``: queries run through the same
-    `pack_queries` (encode, optional binarize, centering, sign bits)
-    and both `_packed_similarity` impls are bit-exact.
+    so per-request work never touches the (C, D) class sums.  Expressed
+    as the k=1 case of the scored top-k primitive (DESIGN.md §14):
+    max similarity = min Hamming distance, and the pinned
+    lowest-index-wins tie-break is exactly `jnp.argmax`'s
+    first-occurrence contract — so labels are bit-identical to
+    `predict` with ``similarity="hamming"`` (same `pack_queries`:
+    encode, optional binarize, centering, sign bits).
+    """
+    indices, _ = search_packed(model, images, class_words, k=1, impl=impl)
+    return indices[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def search_packed(
+    model: HDCModel,
+    images: jax.Array,
+    item_words: jax.Array,
+    *,
+    k: int,
+    impl: str = "jnp",
+) -> tuple[jax.Array, jax.Array]:
+    """Associative-memory search: encode queries, scan packed rows,
+    return the k nearest per query (DESIGN.md §14).
+
+    `item_words` is any (C, W) packed store — the model's class words
+    from :meth:`HDCModel.pack`, or an `ItemMemory`'s rows — and must be
+    packed over the same d = ``cfg.d``.  Returns ((B, k) int32 row
+    indices, (B, k) int32 Hamming distances), each row ascending by
+    (distance, index), lowest index winning ties; bit-identical to the
+    full-argsort oracle on every impl.  ``k=1`` recovers
+    :func:`predict_packed`'s labels exactly.
     """
     cfg = model.cfg
     q = _encode(model, images)
     if cfg.binarize_query:
         q = encoding.binarize(q).astype(jnp.int32)
     qw = model.pack_queries(q)
-    sim = _packed_similarity(qw, class_words, cfg.d, impl).astype(jnp.float32)
-    return metrics.classify(sim)
+    return _packed_topk(qw, item_words, cfg.d, k, impl)
 
 
 def train_and_eval(

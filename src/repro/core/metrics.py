@@ -38,5 +38,13 @@ SIMILARITIES = {
 
 
 def classify(sim: jax.Array) -> jax.Array:
-    """argmax over classes; (B, C) -> (B,) int32."""
+    """argmax over classes; (B, C) -> (B,) int32.
+
+    Tie-break contract (DESIGN.md §14): the **lowest class index wins**
+    — `jnp.argmax` documents first-occurrence semantics on every
+    backend, and the top-k retrieval datapath (`hdc_model._packed_topk`,
+    the Pallas kernel, the sharded psum path) pins the same (score,
+    index) order, so k=1 search and `classify` agree bit-for-bit even
+    on crafted equal-similarity inputs.
+    """
     return jnp.argmax(sim, axis=-1).astype(jnp.int32)

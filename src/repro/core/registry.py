@@ -54,6 +54,13 @@ FitBundleFn = Callable[..., jax.Array]
 #: slice.  ``point_offset`` may be traced (``jax.lax.axis_index`` under
 #: ``shard_map``).
 EncodeSliceFn = Callable[..., jax.Array]
+#: Packed top-k retrieval datapath of one backend (DESIGN.md §14):
+#: (q_words, c_words, d, k) -> ((B, k) int32 indices, (B, k) int32 Hamming
+#: distances), rows sorted ascending by (distance, index) — lowest index
+#: wins ties.  Must be bit-identical to the full-argsort oracle
+#: `repro.kernels.ref.hamming_topk_oracle`; backends without one fall
+#: back to the tiled pure-JAX reference `repro.kernels.ref.hamming_topk`.
+TopkFn = Callable[..., tuple[jax.Array, jax.Array]]
 AvailabilityProbe = Callable[[str], bool]  # platform -> usable?
 
 
@@ -88,6 +95,10 @@ class BackendSpec:
     #: only by generator-backed encoders for sharded packed predict;
     #: table backends serve slices through their pre-sliced codebooks.
     encode_slice: EncodeSliceFn | None = None
+    #: Optional packed top-k retrieval datapath (see TopkFn).  Backends
+    #: without one fall back to the tiled pure-JAX reference in
+    #: EncoderBase.topk — same (indices, distances), streamed in jnp.
+    topk: TopkFn | None = None
 
 
 _ENCODERS: dict[str, "EncoderBase"] = {}
@@ -242,6 +253,29 @@ class EncoderBase:
         resolved = resolve_backend(backend, platform, encoder=self.name)
         return _BACKENDS[self.name][resolved].fit_bundle is not None
 
+    def topk(
+        self, q_words: jax.Array, c_words: jax.Array, d: int, k: int,
+        *, backend: str = "auto",
+    ) -> tuple[jax.Array, jax.Array]:
+        """Packed top-k retrieval through the backend table (DESIGN.md
+        §14): the k nearest stored rows per packed query, ascending by
+        (Hamming distance, index) with lowest index winning ties.
+        Falls back to the tiled pure-JAX reference when the resolved
+        backend registers no kernel — bit-identical either way.
+        """
+        resolved = resolve_backend(backend, encoder=self.name)
+        spec = _BACKENDS[self.name][resolved]
+        if spec.topk is not None:
+            return spec.topk(q_words, c_words, d, k)
+        from repro.kernels import ref as kref  # pure jnp; always importable
+
+        return kref.hamming_topk(q_words, c_words, d, k)
+
+    def has_topk(self, backend: str = "auto", platform: str | None = None) -> bool:
+        """Does the resolved backend register a top-k kernel?"""
+        resolved = resolve_backend(backend, platform, encoder=self.name)
+        return _BACKENDS[self.name][resolved].topk is not None
+
 
 def register_encoder(name: str) -> Callable[[type], type]:
     """Class decorator: instantiate and register an EncoderBase subclass."""
@@ -315,6 +349,29 @@ def register_encode_slice(
             )
         _BACKENDS[encoder][backend] = dataclasses.replace(
             table[backend], encode_slice=fn
+        )
+        return fn
+
+    return deco
+
+
+def register_topk(
+    encoder: str, backend: str
+) -> Callable[[TopkFn], TopkFn]:
+    """Function decorator: attach a packed top-k retrieval datapath to an
+    already-registered backend (see TopkFn for the contract).  Like
+    ``register_fit_bundle``, purely additive."""
+
+    def deco(fn: TopkFn) -> TopkFn:
+        table = _BACKENDS.get(encoder, {})
+        if backend not in table:
+            raise ValueError(
+                f"register_topk({encoder!r}, {backend!r}): backend is "
+                f"not registered (have {sorted(table)}); register the encode "
+                "datapath first"
+            )
+        _BACKENDS[encoder][backend] = dataclasses.replace(
+            table[backend], topk=fn
         )
         return fn
 

@@ -31,6 +31,7 @@ from repro.kernels.encode_bundle import (
 )
 from repro.kernels.encode_unary_mxu import encode_unary_mxu_pallas
 from repro.kernels.hamming_packed import hamming_packed_pallas, round_up as _round_up
+from repro.kernels.hamming_topk import hamming_topk_pallas
 
 
 def _interpret_default() -> bool:
@@ -301,6 +302,33 @@ def hamming_packed(
     )
 
 
+def hamming_topk(
+    q_words: jax.Array,
+    c_words: jax.Array,
+    d: int,
+    k: int,
+    *,
+    block_b: int = 128,
+    block_c: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming packed top-k retrieval. (B,W),(C,W) uint32 ->
+    ((B,k), (B,k)) int32 (indices, Hamming distances), each row
+    ascending by (distance, index) — lowest index wins ties.
+    Semantics = `ref.hamming_topk_oracle` exactly.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    c = c_words.shape[0]
+    # Small stores (the C~10 predict path) shrink the row tile so one
+    # grid step covers the store without 25x padded XOR work.
+    bc = min(block_c, _round_up(max(c, 8), 8))
+    # padding to the block grid happens inside hamming_topk_pallas
+    return hamming_topk_pallas(
+        q_words, c_words, d, k, block_b=block_b, block_c=bc, interpret=interpret
+    )
+
+
 __all__ = [
     "encode_bundle",
     "encode_bundle_dynamic",
@@ -309,5 +337,6 @@ __all__ = [
     "encode_unary_mxu",
     "bundle_binarize",
     "hamming_packed",
+    "hamming_topk",
     "ref",
 ]

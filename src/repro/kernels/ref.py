@@ -60,6 +60,97 @@ def hamming_packed(q_words: jax.Array, c_words: jax.Array, d: int) -> jax.Array:
     return d - 2 * pc
 
 
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def topk_pinned(dist: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Pinned top-k over a (B, C) int32 distance matrix: the k smallest
+    distances per row, ties broken by **lowest column index** — a total
+    order, since indices are unique.  Returns ((B, k) int32 indices,
+    (B, k) int32 distances), each row ascending by (distance, index).
+
+    Implemented as a two-key `lax.sort` (distance primary, index
+    secondary): a composite int key (dist * C + idx) would overflow
+    int32 at retrieval-scale C, and plain `lax.top_k` cannot express
+    the secondary key portably.
+    """
+    b, c = dist.shape
+    if not 1 <= k <= c:
+        raise ValueError(f"k must be in [1, {c}], got {k}")
+    idx = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1)
+    sd, si = jax.lax.sort(
+        (dist.astype(jnp.int32), idx), dimension=-1, num_keys=2
+    )
+    return si[:, :k], sd[:, :k]
+
+
+def hamming_topk_oracle(
+    q_words: jax.Array, c_words: jax.Array, d: int, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Full-argsort oracle for packed top-k retrieval.
+
+    dist[b, c] = popcount(q[b] ^ rows[c]) (true Hamming distance over d
+    dims; padding bits are zeroed by the packers and cancel in the XOR).
+    Returns the k nearest rows per query as ((B, k) indices, (B, k)
+    distances), pinned lowest-index-wins on ties.  Every backend
+    (`ref.hamming_topk`, the Pallas kernel, the sharded psum path) must
+    be bit-identical to this.
+    """
+    x = q_words[:, None, :] ^ c_words[None, :, :]
+    pc = jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+    return topk_pinned(pc, k)
+
+
+def hamming_topk(
+    q_words: jax.Array,
+    c_words: jax.Array,
+    d: int,
+    k: int,
+    *,
+    block_c: int = 4096,
+) -> tuple[jax.Array, jax.Array]:
+    """Tiled pure-JAX top-k: scan over (C/block_c) row tiles carrying a
+    running k-best, so the full (B, C) distance matrix never
+    materializes (at C=1M it would be 4 GB; the carry is (B, k)).
+
+    Each step XOR+popcounts one tile, concatenates the tile's
+    (distance, global-index) candidates onto the carry, and re-selects
+    the k smallest under the pinned (distance, index) order via a
+    two-key sort.  Bit-identical to `hamming_topk_oracle`.
+    """
+    b, w = q_words.shape
+    c = c_words.shape[0]
+    if not 1 <= k <= c:
+        raise ValueError(f"k must be in [1, {c}], got {k}")
+    # Shrink the tile to C for small stores (the predict path has C ~ 10;
+    # padding it to 4096 rows would XOR 400x more than needed).
+    block_c = max(1, min(block_c, c))
+    n_blocks = -(-c // block_c)
+    pad = n_blocks * block_c - c
+    cw = jnp.pad(c_words, ((0, pad), (0, 0))).reshape(n_blocks, block_c, w)
+    starts = jnp.arange(n_blocks, dtype=jnp.int32) * block_c
+    init = (
+        jnp.full((b, k), _I32_MAX, jnp.int32),  # distances
+        jnp.full((b, k), _I32_MAX, jnp.int32),  # indices
+    )
+
+    def one(carry, inp):
+        tile, start = inp
+        x = q_words[:, None, :] ^ tile[None, :, :]
+        pc = jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+        gidx = start + jax.lax.broadcasted_iota(jnp.int32, (b, block_c), 1)
+        valid = gidx < c  # padded rows never win: sentinel (MAX, MAX)
+        dist_t = jnp.where(valid, pc, _I32_MAX)
+        gidx = jnp.where(valid, gidx, _I32_MAX)
+        dists = jnp.concatenate([carry[0], dist_t], axis=1)
+        idxs = jnp.concatenate([carry[1], gidx], axis=1)
+        sd, si = jax.lax.sort((dists, idxs), dimension=-1, num_keys=2)
+        return (sd[:, :k], si[:, :k]), None
+
+    (dist_k, idx_k), _ = jax.lax.scan(one, init, (cw, starts))
+    return idx_k, dist_k
+
+
 def class_onehot(labels: jax.Array, n_classes: int) -> jax.Array:
     """(B,) int labels -> (C, B) int32 {0,1} indicator.
 

@@ -51,6 +51,7 @@ import threading
 import time
 from http import HTTPStatus
 
+from repro.obs.histogram import LatencyHistogram
 from repro.obs.prometheus import Writer, serving_families
 from repro.obs.window import MetricsWindow, WindowSnapshot
 from repro.serving.metrics import ServingMetrics
@@ -128,6 +129,10 @@ class TargetState:
         self.last_ok_t: float | None = None  # perf_counter of last success
         self.last_error: str | None = None
         self.metrics: dict | None = None  # last successful metrics_state
+        # wall time of each scrape attempt (success AND failure — a
+        # slow-then-dead target's timeouts belong in its tail), served
+        # as `uhd_fleet_scrape_seconds{target=}`
+        self.scrape_seconds = LatencyHistogram()
 
     def describe(self, *, now: float, stale_after_s: float) -> dict:
         age = None if self.last_ok_t is None else now - self.last_ok_t
@@ -138,6 +143,14 @@ class TargetState:
             "last_scrape_age_s": age,
             "stale": age is None or age > stale_after_s,
             "last_error": self.last_error,
+            "scrape_p50_ms": (
+                self.scrape_seconds.percentile(50) * 1e3
+                if self.scrape_seconds.count else None
+            ),
+            "scrape_p99_ms": (
+                self.scrape_seconds.percentile(99) * 1e3
+                if self.scrape_seconds.count else None
+            ),
             "models": sorted(self.metrics) if self.metrics else [],
         }
 
@@ -239,6 +252,7 @@ class FleetAggregator:
         summary = {}
         for target in self.targets:
             state = self._states[target.name]
+            t0 = time.perf_counter()
             try:
                 pulled = target.scrape()
                 metrics = dict(pulled.get("metrics") or {})
@@ -250,6 +264,7 @@ class FleetAggregator:
                 with self._lock:
                     state.n_errors += 1
                     state.last_error = f"{type(e).__name__}: {e}"
+                    state.scrape_seconds.observe(time.perf_counter() - t0)
                 summary[target.name] = {"ok": False, "error": state.last_error}
                 continue
             with self._lock:
@@ -257,6 +272,7 @@ class FleetAggregator:
                 state.last_ok_t = time.perf_counter()
                 state.last_error = None
                 state.metrics = metrics
+                state.scrape_seconds.observe(state.last_ok_t - t0)
                 self._ingest_traces(target.name, pulled.get("traces") or ())
             summary[target.name] = {"ok": True, "models": sorted(metrics)}
         self._append_windows()
@@ -344,6 +360,12 @@ class FleetAggregator:
                 m = ServingMetrics.from_state(state)
                 out[name] = out[name].merge(m) if name in out else m
         return out
+
+    def scrape_latencies(self) -> dict[str, LatencyHistogram]:
+        """target name -> its scrape-latency histogram (every attempt,
+        success or failure) — the plane watching its own pull cost."""
+        with self._lock:
+            return {s.name: s.scrape_seconds for s in self._states.values()}
 
     def merged_state(self) -> dict[str, dict]:
         """The merged view in scrape-state form (exact buckets) — what a
@@ -448,6 +470,13 @@ def render_fleet_prometheus(agg: FleetAggregator) -> str:
         w.sample("uhd_fleet_target_scrape_errors_total", {"target": t["name"]},
                  t["n_errors"], mtype="counter",
                  help="failed scrapes per target")
+    for name, hist in agg.scrape_latencies().items():
+        if hist.count:
+            w.histogram(
+                "uhd_fleet_scrape_seconds", {"target": name}, hist,
+                help="wall time per scrape attempt (success or failure) "
+                     "per target",
+            )
     for name, series in fleet["windows"].items():
         labels = {"model": name}
         w.sample("uhd_fleet_request_rate_rps", labels,

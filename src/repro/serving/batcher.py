@@ -25,6 +25,14 @@ response batch admitted together is therefore served by ONE device step
 generation: a hot reload landing mid-stream can never mix model steps
 within one response block.
 
+Blocks carry an **operation tag** (PR 10, DESIGN.md §14): classify
+blocks resolve each future to an int label through ``engine.predict``;
+search blocks (``submit_search_block``) resolve to an
+``((k,) indices, (k,) distances)`` row pair through ``engine.search``.
+A drain step only coalesces consecutive blocks of the same (op, k), so
+one device step never mixes operations — and each distinct k compiles
+its jitted search exactly once, just like the static batch shape.
+
 The engine reference is read once per drain step under the lock —
 :meth:`swap_engine` (the hot-reload path) therefore never drops queued
 requests: whatever is still in the FIFO is simply served by the new
@@ -55,15 +63,22 @@ class QueueFull(RuntimeError):
     """
 
 
+#: Queue-block operation tags: every queued block is (op, pairs).  The
+#: predict op resolves futures to int labels; ("search", k) resolves
+#: them to ((k,) int32 indices, (k,) int32 distances) row pairs.
+OP_PREDICT = ("predict", 0)
+
+
 class ServingFuture:
-    """Handle for one queued request; resolves to an int label."""
+    """Handle for one queued request; resolves to an int label
+    (classify) or an (indices, distances) row pair (search)."""
 
     __slots__ = ("_event", "_label", "_error", "_callbacks", "_cb_lock",
                  "t_submit", "t_done", "trace")
 
     def __init__(self):
         self._event = threading.Event()
-        self._label: int | None = None
+        self._label = None  # int label or (indices, distances) row pair
         self._error: BaseException | None = None
         self._callbacks: list = []
         self._cb_lock = threading.Lock()
@@ -74,12 +89,12 @@ class ServingFuture:
     def done(self) -> bool:
         return self._event.is_set()
 
-    def result(self, timeout: float | None = None) -> int:
+    def result(self, timeout: float | None = None):
         if not self._event.wait(timeout):
             raise TimeoutError("request not served within timeout")
         if self._error is not None:
             raise self._error
-        return self._label  # type: ignore[return-value]
+        return self._label  # label or (indices, distances) per the op
 
     def add_done_callback(self, fn) -> None:
         """Run ``fn(self)`` when the future resolves (immediately if it
@@ -96,7 +111,7 @@ class ServingFuture:
         assert self.t_done is not None, "request not finished"
         return self.t_done - self.t_submit
 
-    def _resolve(self, label: int | None, error: BaseException | None = None):
+    def _resolve(self, label, error: BaseException | None = None):
         if self.t_done is None:  # drain loop may stamp it early so that
             self.t_done = time.perf_counter()  # metrics precede the wakeup
         self._label, self._error = label, error
@@ -134,11 +149,11 @@ class MicroBatcher:
         self.name = name  # model label stamped onto traces
         self.traces = traces  # shared ring; None disables tracing
         self.replica = replica  # pool slot index stamped onto traces
-        # block-granular FIFO: each entry is the [(img, fut), ...] of one
-        # admission (see module docstring); _n_queued tracks requests
-        self._queue: collections.deque[list[tuple[np.ndarray, ServingFuture]]] = (
-            collections.deque()
-        )
+        # block-granular FIFO: each entry is (op, [(img, fut), ...]) of
+        # one admission (see module docstring); _n_queued tracks requests
+        self._queue: collections.deque[
+            tuple[tuple[str, int], list[tuple[np.ndarray, ServingFuture]]]
+        ] = collections.deque()
         self._n_queued = 0
         self._cv = threading.Condition()
         self._thread: threading.Thread | None = None
@@ -193,7 +208,7 @@ class MicroBatcher:
                     f"queue depth {self._n_queued} at max_depth "
                     f"{self.max_depth}; request shed"
                 )
-            self._queue.append([(image, fut)])
+            self._queue.append((OP_PREDICT, [(image, fut)]))
             self._n_queued += 1
             self.metrics.enqueued()
             self._cv.notify_all()
@@ -214,6 +229,34 @@ class MicroBatcher:
         HTTP transport uses this so a mid-batch race with the depth
         bound or a concurrent `stop()` can't strand an already-submitted
         prefix whose results nobody will read."""
+        return self._submit_block(OP_PREDICT, images, request_ids, trace_owner)
+
+    def submit_search_block(
+        self,
+        queries,
+        k: int,
+        *,
+        request_ids: list[str] | None = None,
+        trace_owner: str = OWNER_BATCHER,
+    ) -> list[ServingFuture]:
+        """All-or-nothing admission of a search batch: each future
+        resolves to the query's ((k,) int32 indices, (k,) int32
+        distances) row pair, nearest first, lowest index winning ties
+        (DESIGN.md §14).  Same admission/trace semantics as
+        :meth:`submit_block`; blocks with different k never share a
+        device step."""
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        return self._submit_block(("search", k), queries, request_ids, trace_owner)
+
+    def _submit_block(
+        self,
+        op: tuple[str, int],
+        images,
+        request_ids: list[str] | None,
+        trace_owner: str,
+    ) -> list[ServingFuture]:
         images = np.asarray(images, np.float32)
         if images.ndim != 2:
             raise ValueError(f"submit_block takes (n, H) images, got {images.shape}")
@@ -243,7 +286,7 @@ class MicroBatcher:
             ]
             # one block: the whole response batch is served by one device
             # step on one engine generation (see module docstring)
-            self._queue.append(list(zip(images, futures)))
+            self._queue.append((op, list(zip(images, futures))))
             self._n_queued += len(images)
             self.metrics.enqueued(len(images))
             self._cv.notify_all()
@@ -263,26 +306,34 @@ class MicroBatcher:
 
     # -- draining ----------------------------------------------------------
 
-    def _take_batch(self) -> tuple[ServingEngine, list[tuple[np.ndarray, ServingFuture]]]:
-        """Pop up to batch_size requests + the engine to serve them with.
-        Caller must hold the lock; returns an empty list if idle.
+    def _take_batch(self) -> tuple[
+        ServingEngine, tuple[str, int], list[tuple[np.ndarray, ServingFuture]]
+    ]:
+        """Pop up to batch_size same-op requests + the engine to serve
+        them with.  Caller must hold the lock; empty list if idle.
 
         Takes whole blocks only: a block that would not fit next to the
-        requests already taken waits for the next step.  The single
+        requests already taken — or whose (op, k) differs from the
+        blocks already taken — waits for the next step.  The single
         exception is a block larger than the batch itself, which is
         split at the front of an empty batch (unavoidable — callers who
         need the one-step guarantee keep blocks <= batch_size)."""
         engine = self.engine
         slots = engine.batch_size
+        op = OP_PREDICT
         taken: list[tuple[np.ndarray, ServingFuture]] = []
         while self._queue and len(taken) < slots:
-            block = self._queue[0]
+            blk_op, block = self._queue[0]
+            if taken and blk_op != op:
+                break  # never mix operations within one device step
             if len(taken) + len(block) <= slots:
                 self._queue.popleft()
                 taken.extend(block)
+                op = blk_op
             elif not taken:
                 taken.extend(block[:slots])
-                self._queue[0] = block[slots:]
+                self._queue[0] = (blk_op, block[slots:])
+                op = blk_op
                 break
             else:
                 break
@@ -292,11 +343,12 @@ class MicroBatcher:
             for _, fut in taken:
                 if fut.trace is not None:
                     fut.trace.t_dequeue = t_dequeue
-        return engine, taken
+        return engine, op, taken
 
     def _run_batch(
         self,
         engine: ServingEngine,
+        op: tuple[str, int],
         taken: list[tuple[np.ndarray, ServingFuture]],
     ) -> None:
         slots = engine.batch_size
@@ -312,7 +364,16 @@ class MicroBatcher:
                 fut.trace.step = engine.step
         try:
             with timed_block("device") as tb:
-                labels = tb.sync(engine.predict(batch))
+                if op[0] == "search":
+                    indices, dists = engine.search(batch, op[1])
+                    tb.sync((indices, dists))
+                    results = [
+                        (np.asarray(indices[i]), np.asarray(dists[i]))
+                        for i in range(len(taken))
+                    ]
+                else:
+                    labels = tb.sync(engine.predict(batch))
+                    results = [int(labels[i]) for i in range(len(taken))]
         except Exception as e:  # deliver the failure, keep serving
             for _, fut in taken:
                 fut.t_done = time.perf_counter()
@@ -333,7 +394,7 @@ class MicroBatcher:
                 exemplar=fut.trace.request_id if fut.trace is not None else None,
             )
             self._finish_request(fut)
-            fut._resolve(int(labels[i]))
+            fut._resolve(results[i])
 
     def _finish_request(self, fut: ServingFuture, *, error: bool = False) -> None:
         """Record per-stage latencies and, for batcher-owned traces,
@@ -361,9 +422,9 @@ class MicroBatcher:
     def step(self) -> int:
         """Serve one micro-batch synchronously; returns requests served."""
         with self._cv:
-            engine, taken = self._take_batch()
+            engine, op, taken = self._take_batch()
         if taken:
-            self._run_batch(engine, taken)
+            self._run_batch(engine, op, taken)
         return len(taken)
 
     def flush(self) -> int:
@@ -395,9 +456,9 @@ class MicroBatcher:
                     if remaining <= 0:
                         break
                     self._cv.wait(remaining)
-                engine, taken = self._take_batch()
+                engine, op, taken = self._take_batch()
             if taken:
-                self._run_batch(engine, taken)
+                self._run_batch(engine, op, taken)
 
     def start(self) -> "MicroBatcher":
         """Start the background drain thread (idempotent; reopens a
@@ -426,7 +487,7 @@ class MicroBatcher:
             self._closed = True
             thread, self._thread = self._thread, None
             if not drain:
-                pending = [pair for block in self._queue for pair in block]
+                pending = [pair for _, block in self._queue for pair in block]
                 self._queue.clear()
                 self._n_queued = 0
                 self.metrics.dropped(len(pending))

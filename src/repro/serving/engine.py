@@ -105,6 +105,22 @@ class ServingEngine:
         labels = self.execution.predict(self.model, self.class_words, images)
         return np.asarray(labels)
 
+    def search(self, images, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """(B, H) raw images -> ((B, k) int32 row indices, (B, k) int32
+        Hamming distances), each row ascending by (distance, index)
+        with lowest index winning ties (DESIGN.md §14).
+
+        The store searched is the engine's pack-once class-word matrix
+        — the same artifact `predict` argmaxes over — so ``k=1``
+        indices equal `predict`'s labels bit-for-bit.  Retraces per
+        distinct (B, k); the batcher coalesces only same-k blocks so
+        steady-state traffic compiles once per served k.
+        """
+        idx, dist = self.execution.search(
+            self.model, self.class_words, images, int(k)
+        )
+        return np.asarray(idx), np.asarray(dist)
+
     def warmup(self) -> "ServingEngine":
         """Compile the static-shape serving path before taking traffic."""
         dummy = jnp.zeros((self.batch_size, self.model.cfg.n_features), jnp.float32)

@@ -109,6 +109,15 @@ class DeviceExecution:
             model, jnp.asarray(images), class_words, impl=self.impl
         )
 
+    def search(
+        self, model: HDCModel, class_words: jax.Array, images, k: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Scored top-k over the packed store (DESIGN.md §14): the k
+        nearest rows per query, ascending (distance, index)."""
+        return hdc_model.search_packed(
+            model, jnp.asarray(images), class_words, k=k, impl=self.impl
+        )
+
     def describe(self) -> dict:
         return {
             "placement": self.placement,
@@ -210,6 +219,67 @@ def _sharded_predict_fn(cfg, mesh: Mesh, impl: str, rules: ShardingRules):
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=32)
+def _sharded_search_fn(cfg, mesh: Mesh, impl: str, k: int, rules: ShardingRules):
+    """Jitted shard_map packed top-k search (DESIGN.md §14).
+
+    Identical front half to `_sharded_predict_fn` — every shard encodes,
+    centers, and packs its own D-slice — but the reduction carries
+    *distances*: each shard derives its partial popcount from the
+    partial score as ``(d_local - sim_local) // 2`` (exact: the score is
+    d_local - 2*pc by construction, so the difference is even), and
+    **one psum** of the (B, C) int32 partials yields the exact global
+    Hamming distances, because distances are plain integer sums over D
+    slices (order-free; each shard's pad bits are zero in both operands
+    and cancel in its local XOR).  The pinned (distance, index) top-k
+    then runs on the replicated global matrix, so results are
+    bit-identical to the single-device oracle — including ties and
+    ``d_local % 32 != 0``.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axis = model_axis_for(mesh, cfg.d, rules=rules)
+    n_shards = mesh.shape[axis]
+    d_local = cfg.d // n_shards
+    enc = registry.get_encoder(cfg.encoder)
+    like = HDCModel(
+        cfg=cfg,
+        codebooks=enc.codebook_specs(cfg),
+        class_sums=jax.ShapeDtypeStruct((cfg.n_classes, cfg.d), jnp.int32),
+        n_seen=jax.ShapeDtypeStruct((2,), hdc_model._NSEEN_DTYPE),
+    )
+    mspecs = jax.tree_util.tree_map(
+        lambda ns: ns.spec, like.shardings(mesh, rules=rules)
+    )
+
+    def step(m: HDCModel, images: jax.Array, class_words: jax.Array):
+        from repro.kernels import ref as kref  # pure jnp; always importable
+
+        x_q = encoding.quantize_images(images, cfg.levels, cfg.max_intensity)
+        point_offset = None
+        if enc.dynamic_generator:
+            point_offset = jax.lax.axis_index(axis) * d_local
+        q = enc.encode_slice(
+            cfg, m.codebooks, x_q,
+            backend=cfg.backend, d=d_local, point_offset=point_offset,
+        )
+        if cfg.binarize_query:
+            q = encoding.binarize(q).astype(jnp.int32)
+        qw = unary.pack_hypervector(_centered_local(cfg, q, axis))
+        sim_local = hdc_model._packed_similarity(qw, class_words, d_local, impl)
+        dist_local = (d_local - sim_local) // 2  # exact partial popcount
+        dist = jax.lax.psum(dist_local, axis)
+        return kref.topk_pinned(dist, k)
+
+    fn = shard_map(
+        step, mesh=mesh,
+        in_specs=(mspecs, P(), P(None, axis)),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
 class ShardedExecution:
     """D-partitioned packed predict over a ``("model",)`` mesh."""
 
@@ -246,6 +316,15 @@ class ShardedExecution:
 
     def predict(self, model: HDCModel, class_words: jax.Array, images) -> jax.Array:
         fn = _sharded_predict_fn(model.cfg, self.mesh, self.impl, self.rules)
+        return fn(model, jnp.asarray(images), class_words)
+
+    def search(
+        self, model: HDCModel, class_words: jax.Array, images, k: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """One-psum exact sharded top-k (see `_sharded_search_fn`)."""
+        fn = _sharded_search_fn(
+            model.cfg, self.mesh, self.impl, int(k), self.rules
+        )
         return fn(model, jnp.asarray(images), class_words)
 
     def describe(self) -> dict:

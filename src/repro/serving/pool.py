@@ -71,6 +71,7 @@ class ReplicaPool:
         self._lock = threading.Lock()
         self._rr = 0  # rotation origin: round-robins ties
         self._closed = False
+        self._draining: set[int] = set()  # replica indices out of rotation
         # dispatch distribution (submit_block calls routed per replica);
         # the chosen replica is also stamped on every request's trace
         # (`RequestTrace.replica` via the replica's MicroBatcher), so a
@@ -110,6 +111,17 @@ class ReplicaPool:
                 images, request_ids=request_ids, trace_owner=trace_owner
             )
 
+    def submit_search_block(
+        self, queries, k, *, request_ids=None, trace_owner=OWNER_BATCHER
+    ):
+        """Route one search batch to one replica (same one-step guarantee
+        as `submit_block`; see `MicroBatcher.submit_search_block`)."""
+        with self._lock:
+            self._admit(len(queries))
+            return self._pick().submit_search_block(
+                queries, k, request_ids=request_ids, trace_owner=trace_owner
+            )
+
     def submit_many(self, images):
         return [self.submit(img) for img in images]
 
@@ -133,7 +145,8 @@ class ReplicaPool:
         the replica's observed device-stage mean seconds (the span data
         `repro.obs` collects).  Replicas with no observations yet borrow
         the fleet mean (or 1.0), keeping scores comparable; the rotation
-        origin round-robins exact ties."""
+        origin round-robins exact ties.  Draining replicas (see
+        :meth:`drain`) are out of rotation entirely."""
         means: list[float | None] = []
         for r in self.replicas:
             dev = r.metrics.stage.get("device")
@@ -142,18 +155,59 @@ class ReplicaPool:
         known = [m for m in means if m is not None]
         default = sum(known) / len(known) if known else 1.0
         n = len(self.replicas)
-        best, best_score = 0, None
+        best, best_score = None, None
         for k in range(n):
             i = (self._rr + k) % n
+            if i in self._draining:
+                continue
             r = self.replicas[i]
             pending = r.queue_depth() + r.metrics.inflight
             weight = means[i] if means[i] is not None else default
             score = pending * weight
             if best_score is None or score < best_score:
                 best, best_score = i, score
+        if best is None:
+            raise RuntimeError(
+                f"every replica of the {n}-replica pool is draining; "
+                "undrain one before dispatching"
+            )
         self._rr = (best + 1) % n
         self.n_dispatched[best] += 1
         return self.replicas[best]
+
+    # -- rolling restarts --------------------------------------------------
+
+    def drain(self, i: int) -> None:
+        """Take replica ``i`` out of dispatch rotation and synchronously
+        serve whatever its batcher still queues — the rolling-restart
+        building block (DESIGN.md §12 follow-ups).  The replica's drain
+        thread keeps running (already-dispatched work completes and a
+        later :meth:`undrain` needs no restart); it simply receives no
+        new requests, and `/healthz` reports it ``draining``."""
+        i = int(i)
+        if not 0 <= i < len(self.replicas):
+            raise IndexError(
+                f"replica {i} out of range for a {len(self.replicas)}-replica pool"
+            )
+        with self._lock:
+            self._draining.add(i)
+        self.replicas[i].flush()
+
+    def undrain(self, i: int) -> None:
+        """Return replica ``i`` to dispatch rotation (idempotent)."""
+        i = int(i)
+        if not 0 <= i < len(self.replicas):
+            raise IndexError(
+                f"replica {i} out of range for a {len(self.replicas)}-replica pool"
+            )
+        with self._lock:
+            self._draining.discard(i)
+
+    @property
+    def draining(self) -> tuple[int, ...]:
+        """Sorted indices of replicas currently out of rotation."""
+        with self._lock:
+            return tuple(sorted(self._draining))
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -245,4 +299,5 @@ class ReplicaPool:
         out["n_replicas"] = len(reps)
         out["replicas"] = reps
         out["n_dispatched"] = [int(c) for c in self.n_dispatched]
+        out["draining"] = list(self.draining)
         return out

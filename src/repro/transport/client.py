@@ -235,6 +235,56 @@ class HdcClient:
         )
         return np.asarray(out["labels"], np.int32)
 
+    # -- search (top-k scored retrieval, DESIGN.md §14) --------------------
+
+    def search(
+        self,
+        name: str,
+        queries,
+        k: int = 1,
+        *,
+        binary: bool = True,
+        request_id: str | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(n, H) queries -> ((n, k) int32 indices, (n, k) int32 Hamming
+        distances), each row ascending by (distance, index) with the
+        lowest index winning ties.
+
+        `binary=True` is the hot path: raw f32 query rows out (``k`` on
+        the query string), raw back-to-back i32 index/distance blocks
+        returned.  `binary=False` exercises the JSON batch form.  At
+        ``k=1`` the index column equals `predict_batch`'s labels
+        bit-for-bit — search is the scored generalization of predict.
+        """
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        k = int(k)
+        if binary:
+            status, content_type, payload = self._request(
+                "POST",
+                f"{protocol.search_path(name)}?k={k}",
+                protocol.encode_images(queries),
+                {"Content-Type": protocol.CT_F32, "Accept": protocol.CT_I32,
+                 **self._trace_headers(request_id)},
+            )
+            self._raise_for_status(status, content_type, payload)
+            if content_type != protocol.CT_I32:
+                raise TransportError(
+                    status, f"expected {protocol.CT_I32} body, got {content_type}"
+                )
+            return protocol.decode_search_result(payload, k)
+        body = json.dumps({"queries": queries.tolist(), "k": k}).encode()
+        out = self._json(
+            "POST", protocol.search_path(name), body,
+            {"Content-Type": protocol.CT_JSON,
+             **self._trace_headers(request_id)},
+        )
+        return (
+            np.asarray(out["indices"], np.int32),
+            np.asarray(out["distances"], np.int32),
+        )
+
     # -- feedback (online learning, DESIGN.md §10) -------------------------
 
     def feedback(self, name: str, images, labels, *, binary: bool = True) -> dict:

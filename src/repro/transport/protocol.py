@@ -19,6 +19,15 @@ plane: a JSON form for debugging and a raw form (f32 image rows
 followed by i32 labels, ``4H + 4`` bytes per example) for the
 online-learning hot path.
 
+The search plane (``:search``, DESIGN.md §14) generalizes predict to
+scored top-k retrieval: queries travel exactly like predict images
+(JSON ``{"query"/"queries", "k"}`` or raw ``x-hdc-f32`` rows with
+``?k=`` on the query string), and the raw response under
+``Accept: application/x-hdc-i32`` is the C-order ``(n, k)`` int32
+indices followed by the ``(n, k)`` int32 Hamming distances, back to
+back — ``n`` recovers from the body length given k, so the hot path
+stays one memcpy each way.
+
 Everything here is shared by `server` and `client` so the two ends can
 never skew; the codec functions are pure and unit-tested in
 ``tests/test_transport.py``.
@@ -43,6 +52,7 @@ ROUTE_FLEET = "/v1/fleet"  # aggregator-only: per-target scrape health
 ROUTE_PROFILE = "/v1/debug/profile"
 PREDICT_SUFFIX = ":predict"
 FEEDBACK_SUFFIX = ":feedback"
+SEARCH_SUFFIX = ":search"
 
 #: cross-hop trace propagation: the client mints a request id and sends
 #: it here; the server adopts it (after `repro.obs.trace.adopt_request_id`
@@ -80,6 +90,10 @@ def predict_path(name: str) -> str:
 
 def feedback_path(name: str) -> str:
     return f"{ROUTE_MODELS}/{name}{FEEDBACK_SUFFIX}"
+
+
+def search_path(name: str) -> str:
+    return f"{ROUTE_MODELS}/{name}{SEARCH_SUFFIX}"
 
 
 def encode_images(images) -> bytes:
@@ -211,3 +225,81 @@ def parse_predict_json(obj) -> tuple[np.ndarray, bool]:
             f'"images" must be a non-empty (n, H) list of lists, got {arr.shape}'
         )
     return arr, single
+
+
+def parse_k(value) -> int:
+    """Validate a requested k (JSON field or ``?k=`` query param) -> int.
+
+    Must be an integer >= 1 — ``2.5`` is a 400, not a truncation.  The
+    upper bound (the served store's row count) is the server's to
+    enforce; it knows the model.
+    """
+    if isinstance(value, bool) or (
+        isinstance(value, float) and value != int(value)
+    ):
+        raise ValueError(f'"k" must be a positive integer, got {value!r}')
+    try:
+        k = int(value)
+    except (TypeError, ValueError):
+        raise ValueError(f'"k" must be a positive integer, got {value!r}') from None
+    if k < 1:
+        raise ValueError(f'"k" must be >= 1, got {k}')
+    return k
+
+
+def parse_search_json(obj) -> tuple[np.ndarray, int, bool]:
+    """JSON search body -> ((n, H) float32 queries, k, was_single).
+
+    ``{"query": [...]}`` is the single form (response carries flat
+    ``"indices"``/``"distances"``); ``{"queries": [[...], ...]}`` the
+    batch form (nested lists).  ``"k"`` is optional and defaults to 1.
+    """
+    if not isinstance(obj, dict) or ("query" in obj) == ("queries" in obj):
+        raise ValueError(
+            'search body must be {"query": [...], "k": 5} or '
+            '{"queries": [[...], ...], "k": 5}'
+        )
+    single = "query" in obj
+    arr = np.asarray(obj["query"] if single else obj["queries"], np.float32)
+    if single:
+        if arr.ndim != 1:
+            raise ValueError(f'"query" must be a flat (H,) list, got {arr.shape}')
+        arr = arr[None]
+    elif arr.ndim != 2 or arr.shape[0] == 0:
+        raise ValueError(
+            f'"queries" must be a non-empty (n, H) list of lists, got {arr.shape}'
+        )
+    return arr, parse_k(obj.get("k", 1)), single
+
+
+def encode_search_result(indices, distances) -> bytes:
+    """((n, k) indices, (n, k) distances) -> raw bytes: the C-order LE
+    int32 indices block followed by the distances block, no framing."""
+    idx = np.ascontiguousarray(np.asarray(indices, _I32))
+    dist = np.ascontiguousarray(np.asarray(distances, _I32))
+    if idx.ndim != 2 or idx.shape != dist.shape:
+        raise ValueError(
+            f"indices/distances must share one (n, k) shape, got "
+            f"{idx.shape} and {dist.shape}"
+        )
+    return idx.tobytes() + dist.tobytes()
+
+
+def decode_search_result(body: bytes, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Raw search response bytes -> ((n, k) int32 indices, (n, k) int32
+    distances); loud on any length mismatch (each query row costs
+    exactly ``8k`` bytes)."""
+    row_bytes = 2 * k * _I32.itemsize
+    if k < 1 or len(body) == 0 or len(body) % row_bytes != 0:
+        raise ValueError(
+            f"binary search payload of {len(body)} bytes is not a positive "
+            f"multiple of {row_bytes} (= 2 * {k} int32 per query)"
+        )
+    n = len(body) // row_bytes
+    split = n * k * _I32.itemsize
+    indices = np.frombuffer(body[:split], _I32).reshape(n, k)
+    distances = np.frombuffer(body[split:], _I32).reshape(n, k)
+    return (
+        indices.astype(np.int32, copy=False),
+        distances.astype(np.int32, copy=False),
+    )

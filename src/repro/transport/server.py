@@ -23,6 +23,13 @@ Routes (DESIGN.md §8, §10, §13):
     An ``x-hdc-request-id`` header is *adopted* (after strict
     sanitization) instead of minting, so a client-minted id names the
     request across hops — client, server, pool replica, device step.
+  * ``POST /v1/models/{name}:search`` — top-k scored retrieval against
+    the model's pack-once class-word store (DESIGN.md §14).  Same two
+    forms as predict: JSON (``{"query"/"queries", "k"}``) or raw
+    ``application/x-hdc-f32`` query rows with ``?k=`` on the query
+    string; ``Accept: application/x-hdc-i32`` returns the raw (n, k)
+    int32 indices followed by the (n, k) int32 Hamming distances.
+    ``k=1`` indices are bit-identical to predict's labels.
   * ``POST /v1/models/{name}:feedback`` — labeled examples for the
     model's `OnlineLearner`.  Labels are validated at the boundary
     (`encoding.validate_labels`; out-of-range or shape mismatch -> 400)
@@ -405,6 +412,15 @@ class HdcHttpServer(AsyncHttpServer):
                 )
             return await self._predict(name, request)
         if path.startswith(protocol.ROUTE_MODELS + "/") and path.endswith(
+            protocol.SEARCH_SUFFIX
+        ):
+            name = path[len(protocol.ROUTE_MODELS) + 1 : -len(protocol.SEARCH_SUFFIX)]
+            if method != "POST":
+                return _Response.error(
+                    HTTPStatus.METHOD_NOT_ALLOWED, "search is POST-only"
+                )
+            return await self._search(name, request)
+        if path.startswith(protocol.ROUTE_MODELS + "/") and path.endswith(
             protocol.FEEDBACK_SUFFIX
         ):
             name = path[len(protocol.ROUTE_MODELS) + 1 : -len(protocol.FEEDBACK_SUFFIX)]
@@ -448,15 +464,18 @@ class HdcHttpServer(AsyncHttpServer):
             }
             replicas = getattr(batcher, "replicas", None)
             if replicas is not None:  # ReplicaPool: per-replica liveness
+                draining = set(getattr(batcher, "draining", ()) or ())
                 entry["replicas"] = [
                     {
                         "replica": i,
                         "step": r.engine.step,
                         "queue_depth": r.queue_depth(),
                         "inflight": r.metrics.inflight,
+                        "draining": i in draining,
                     }
                     for i, r in enumerate(replicas)
                 ]
+                entry["draining"] = sorted(draining)
             models[name] = entry
         return _Response.json(HTTPStatus.OK, {"status": "ok", "models": models})
 
@@ -681,6 +700,143 @@ class HdcHttpServer(AsyncHttpServer):
             )
         # echo the effective id so a client that did not mint one can
         # still resolve its trace (`/v1/traces?id=`) after the fact
+        response.extra_headers[protocol.HDR_REQUEST_ID] = rid
+        response.on_written = self._trace_writer(batcher, futures)
+        return response
+
+    # -- search (top-k scored retrieval, DESIGN.md §14) --------------------
+
+    async def _search(self, name: str, request: _Request) -> _Response:
+        """Top-k retrieval over the model's pack-once class-word store.
+
+        Mirrors `_predict` end to end — same admission control, trace
+        propagation, and micro-batching — but each slot resolves to an
+        ``(indices, distances)`` row pair instead of a label.  ``k`` is
+        bounded by the store's row count (the served model's
+        ``n_classes``): asking for more neighbors than rows is a 400,
+        never a silent truncation.
+        """
+        try:
+            batcher = self.registry.batcher(name)
+        except KeyError:
+            return _Response.error(
+                HTTPStatus.NOT_FOUND,
+                f"unknown model {name!r}",
+                registered=list(self.registry.names()),
+            )
+        cfg = batcher.engine.model.cfg
+        n_features = cfg.n_features
+
+        content_type = request.header("content-type", protocol.CT_JSON)
+        content_type = content_type.split(";")[0].strip().lower()
+        single = False
+        try:
+            if content_type == protocol.CT_F32:
+                queries = protocol.decode_images(request.body, n_features)
+                k = protocol.parse_k(request.query.get("k", "1"))
+            elif content_type == protocol.CT_JSON:
+                queries, k, single = protocol.parse_search_json(
+                    json.loads(request.body or b"{}")
+                )
+            else:
+                return _Response.error(
+                    HTTPStatus.UNSUPPORTED_MEDIA_TYPE,
+                    f"unsupported content type {content_type!r}; "
+                    f"use {protocol.CT_JSON} or {protocol.CT_F32}",
+                )
+            if queries.shape[1] != n_features:
+                raise ValueError(
+                    f"model {name!r} takes {n_features} features per query, "
+                    f"got {queries.shape[1]}"
+                )
+            if k > cfg.n_classes:
+                raise ValueError(
+                    f"k={k} exceeds the {cfg.n_classes} rows in model "
+                    f"{name!r}'s store"
+                )
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            return _Response.error(HTTPStatus.BAD_REQUEST, str(e))
+
+        # -- admission: same bounded queue depth as predict ----------------
+        limit = batcher.max_depth
+        if limit is None:
+            limit = self.max_queue_depth
+        if limit is not None and batcher.queue_depth() + len(queries) > limit:
+            batcher.metrics.shed(len(queries))
+            return _Response.error(
+                HTTPStatus.TOO_MANY_REQUESTS,
+                f"model {name!r} overloaded: queue depth "
+                f"{batcher.queue_depth()} + {len(queries)} exceeds {limit}",
+                retry=True,
+            )
+
+        loop = asyncio.get_running_loop()
+        rid = adopt_request_id(
+            request.header(protocol.HDR_REQUEST_ID)
+        ) or new_request_id()
+        request_ids = (
+            [rid] if len(queries) == 1
+            else [f"{rid}/{i}" for i in range(len(queries))]
+        )
+        try:
+            futures = batcher.submit_search_block(
+                queries, k, request_ids=request_ids, trace_owner=OWNER_TRANSPORT
+            )
+        except QueueFull as e:
+            return _Response.error(HTTPStatus.TOO_MANY_REQUESTS, str(e), retry=True)
+        except RuntimeError as e:  # stopping batcher, or fully-drained pool
+            return _Response.error(HTTPStatus.SERVICE_UNAVAILABLE, str(e))
+        awaitables = [self._bridge(loop, fut) for fut in futures]
+
+        try:
+            rows = await asyncio.wait_for(
+                asyncio.gather(*awaitables), timeout=self.request_timeout_s
+            )
+        except asyncio.TimeoutError:
+            self._abort_traces(futures)
+            return _Response.error(
+                HTTPStatus.GATEWAY_TIMEOUT,
+                f"request not served within {self.request_timeout_s}s",
+            )
+        except RuntimeError as e:
+            self._abort_traces(futures)
+            return _Response.error(HTTPStatus.SERVICE_UNAVAILABLE, str(e))
+        except Exception as e:
+            self._abort_traces(futures)
+            return _Response.error(
+                HTTPStatus.INTERNAL_SERVER_ERROR, f"{type(e).__name__}: {e}"
+            )
+
+        t_write_start = time.perf_counter()
+        for fut in futures:
+            if fut.trace is not None:
+                fut.trace.t_write_start = t_write_start
+        indices = [row[0] for row in rows]
+        distances = [row[1] for row in rows]
+        if protocol.CT_I32 in request.header("accept", ""):
+            response = _Response(
+                HTTPStatus.OK,
+                protocol.encode_search_result(indices, distances),
+                protocol.CT_I32,
+            )
+        elif single:
+            response = _Response.json(
+                HTTPStatus.OK,
+                {
+                    "indices": [int(i) for i in indices[0]],
+                    "distances": [int(d) for d in distances[0]],
+                    "k": k,
+                },
+            )
+        else:
+            response = _Response.json(
+                HTTPStatus.OK,
+                {
+                    "indices": [[int(i) for i in row] for row in indices],
+                    "distances": [[int(d) for d in row] for row in distances],
+                    "k": k,
+                },
+            )
         response.extra_headers[protocol.HDR_REQUEST_ID] = rid
         response.on_written = self._trace_writer(batcher, futures)
         return response

@@ -553,7 +553,7 @@ def test_check_regression_fails_on_missing_metric_or_artifact(tmp_path):
 def test_check_regression_update_baseline_roundtrip(tmp_path):
     art = tmp_path / "bench"
     art.mkdir()
-    # synthesize all six artifacts with just the gated paths present
+    # synthesize every gated artifact with just the gated paths present
     payloads = {
         "BENCH_train": {"summary": {"fused_img_per_s": 100.0, "speedup": 2.0}},
         "BENCH_serve": {"encoders": {
@@ -574,6 +574,8 @@ def test_check_regression_update_baseline_roundtrip(tmp_path):
         "BENCH_obs": {"scrape_cycle": {"p50_ms": 15.0},
                       "merge": {"p50_ms": 1.0},
                       "staleness_detect_ms": 250.0},
+        "BENCH_search": {"summary": {"queries_per_s": 120.0,
+                                     "p99_ms": 15.0}},
     }
     for name, payload in payloads.items():
         (art / f"{name}.json").write_text(json.dumps(payload))

@@ -1,0 +1,613 @@
+"""PR 10 top-k scored retrieval: kernels, ItemMemory, serving, wire.
+
+The acceptance contract (ISSUE 10): `hamming_topk` is bit-identical to
+a full-argsort oracle on every backend — the tiled pure-JAX reference,
+the streaming Pallas kernel, and the 8-device sharded datapath — with
+the tie-break pinned to lowest index; ``k=1`` recovers
+`predict_packed`'s labels exactly; and the whole thing is served over
+HTTP (`POST /v1/models/{name}:search`, JSON and raw binary) with the
+same admission control as predict.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HDCConfig,
+    HDCModel,
+    ItemMemory,
+    get_encoder,
+    search_packed,
+)
+from repro.core import hdc_model
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.serving import ModelRegistry, ReplicaPool, ServingEngine
+from repro.serving.batcher import MicroBatcher
+from repro.transport import (
+    HdcClient,
+    HdcHttpServer,
+    TransportError,
+    protocol,
+)
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+RNG = np.random.default_rng(10)
+
+
+def _cfg(**kw):
+    base = dict(n_features=24, n_classes=6, d=128, levels=16,
+                similarity="hamming")
+    base.update(kw)
+    return HDCConfig(**base)
+
+
+def _trained(cfg, n=48):
+    x = jnp.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.n_classes, (n,)), jnp.int32)
+    return HDCModel.create(cfg).fit(x, y)
+
+
+def _queries(cfg, n=12):
+    return np.asarray(RNG.uniform(0, 255, (n, cfg.n_features)), np.float32)
+
+
+def _random_store(b, c, d, *, dup_every=0):
+    """Random packed (queries, store) pair; `dup_every` duplicates every
+    n-th store row (forcing exact distance ties the pinned ordering must
+    resolve by index)."""
+    n_words = (d + 31) // 32
+    q = RNG.integers(0, 1 << 32, (b, n_words), dtype=np.uint32)
+    c = RNG.integers(0, 1 << 32, (c, n_words), dtype=np.uint32)
+    # keep pad bits of the last word zero, as pack_hypervector guarantees
+    if d % 32:
+        mask = np.uint32((1 << (d % 32)) - 1)
+        q[:, -1] &= mask
+        c[:, -1] &= mask
+    if dup_every:
+        for i in range(dup_every, len(c), dup_every):
+            c[i] = c[i - dup_every]
+    return jnp.asarray(q), jnp.asarray(c)
+
+
+def _assert_topk_rows_sorted(idx, dist):
+    """Every row must ascend by (distance, index) — the pinned order."""
+    idx, dist = np.asarray(idx), np.asarray(dist)
+    keys = dist.astype(np.int64) * (idx.max() + 2) + idx
+    assert np.all(np.diff(keys, axis=1) > 0), (idx, dist)
+
+
+# ---------------------------------------------------------------------------
+# kernel layer: oracle bit-identity, ties, shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [37, 64, 100, 1000])
+@pytest.mark.parametrize("k", [1, 8, 64])
+def test_topk_matches_oracle_all_impls(d, k):
+    """Tiled reference and streaming Pallas kernel vs the full-argsort
+    oracle: bit-identical indices AND distances, including D % 32 != 0
+    (masked pad bits) and duplicated store rows (exact ties)."""
+    c = max(k, 70)
+    q, cw = _random_store(9, c, d, dup_every=7)
+    oi, od = kref.hamming_topk_oracle(q, cw, d, k)
+    for name, (ti, td) in {
+        "ref": kref.hamming_topk(q, cw, d, k, block_c=32),
+        "pallas": ops.hamming_topk(q, cw, d, k, interpret=True),
+    }.items():
+        np.testing.assert_array_equal(np.asarray(ti), np.asarray(oi), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(od), err_msg=name)
+    _assert_topk_rows_sorted(oi, od)
+
+
+def test_topk_pinned_tie_break_is_lowest_index():
+    """Crafted equal-distance store: every row identical -> all
+    distances equal -> the winners must be 0, 1, 2, ... in order."""
+    d, c, k = 64, 12, 5
+    row = RNG.integers(0, 1 << 32, (1, 2), dtype=np.uint32)
+    cw = jnp.asarray(np.repeat(row, c, axis=0))
+    q = jnp.asarray(RNG.integers(0, 1 << 32, (3, 2), dtype=np.uint32))
+    for ti, td in (
+        kref.hamming_topk_oracle(q, cw, d, k),
+        kref.hamming_topk(q, cw, d, k, block_c=4),
+        ops.hamming_topk(q, cw, d, k, interpret=True),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(ti), np.tile(np.arange(k, dtype=np.int32), (3, 1))
+        )
+        assert np.all(np.asarray(td) == np.asarray(td)[:, :1])
+
+
+def test_topk_k_equals_store_size_is_a_full_sort():
+    d, c = 96, 33
+    q, cw = _random_store(4, c, d, dup_every=5)
+    oi, od = kref.hamming_topk_oracle(q, cw, d, c)
+    ti, td = kref.hamming_topk(q, cw, d, c, block_c=8)
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(td), np.asarray(od))
+    # a full sort visits every index exactly once
+    assert np.array_equal(np.sort(np.asarray(ti), axis=1)[0], np.arange(c))
+
+
+def test_topk_validates_k():
+    q, cw = _random_store(2, 10, 64)
+    for fn in (kref.hamming_topk_oracle, kref.hamming_topk):
+        with pytest.raises(ValueError, match="k"):
+            fn(q, cw, 64, 0)
+        with pytest.raises(ValueError, match="k"):
+            fn(q, cw, 64, 11)
+    with pytest.raises(ValueError, match="k"):
+        ops.hamming_topk(q, cw, 64, 0, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# registry: topk capability next to fit_bundle
+# ---------------------------------------------------------------------------
+
+
+def test_registry_topk_capability_and_fallback():
+    for name in ("uhd", "uhd_dynamic"):
+        enc = get_encoder(name)
+        assert enc.has_topk("pallas")
+        # every non-pallas backend registers no kernel and falls back to
+        # the kref reference — still bit-identical
+        others = [b for b in enc.backends() if b != "pallas"]
+        assert others and not any(enc.has_topk(b) for b in others)
+    q, cw = _random_store(3, 20, 100, dup_every=4)
+    oi, od = kref.hamming_topk_oracle(q, cw, 100, 8)
+    enc = get_encoder("uhd")
+    fallback = [b for b in enc.backends() if b != "pallas"][0]
+    for backend in (fallback, "pallas"):
+        ti, td = enc.topk(q, cw, 100, 8, backend=backend)
+        np.testing.assert_array_equal(np.asarray(ti), np.asarray(oi))
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(od))
+
+
+# ---------------------------------------------------------------------------
+# core: search_packed, k=1 == predict, ItemMemory
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("encoder", ["uhd", "uhd_dynamic"])
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_search_k1_is_predict(encoder, impl):
+    """The refactor's core claim: predict is search at k=1 — the index
+    column must equal the argmax labels bit-for-bit."""
+    cfg = _cfg(encoder=encoder, d=100, sobol_skip=3)  # 100 % 32 != 0
+    model = _trained(cfg)
+    q = jnp.asarray(_queries(cfg))
+    cw = model.pack()
+    labels = np.asarray(hdc_model.predict_packed(model, q, cw, impl=impl))
+    idx, dist = search_packed(model, q, cw, k=1, impl=impl)
+    np.testing.assert_array_equal(np.asarray(idx)[:, 0], labels)
+    assert np.asarray(dist).shape == (len(labels), 1)
+
+
+def test_search_packed_rows_are_sorted_and_exact():
+    from repro.core import encoding, unary
+
+    cfg = _cfg(d=160)
+    model = _trained(cfg)
+    q = jnp.asarray(_queries(cfg, 8))
+    cw = model.pack()
+    idx, dist = search_packed(model, q, cw, k=cfg.n_classes, impl="jnp")
+    _assert_topk_rows_sorted(idx, dist)
+    # distances are true Hamming distances against the packed store
+    enc = model.encode(q)
+    if cfg.binarize_query:
+        enc = encoding.binarize(enc).astype(jnp.int32)
+    qw = model.pack_queries(enc)
+    full = np.asarray(
+        jax.vmap(lambda w: unary.popcount(jnp.bitwise_xor(w, cw)))(qw)
+    )
+    np.testing.assert_array_equal(
+        np.take_along_axis(full, np.asarray(idx), axis=1), np.asarray(dist)
+    )
+
+
+def test_item_memory_add_search_delete():
+    im = ItemMemory(d=100, impl="jnp")
+    assert len(im) == 0
+    hvs = np.sign(RNG.standard_normal((7, 100))).astype(np.float32)
+    pos = im.add(hvs)
+    np.testing.assert_array_equal(pos, np.arange(7))
+    assert len(im) == 7 and im.nbytes == 7 * 4 * 4  # ceil(100/32) = 4 words
+
+    # each stored vector is its own nearest neighbor at distance 0
+    idx, dist = im.search(hvs, 1)
+    np.testing.assert_array_equal(idx[:, 0], np.arange(7))
+    assert np.all(dist == 0)
+
+    # delete shifts later rows left: old row 3 is gone, old row 4 is
+    # now position 3
+    im.delete([3])
+    assert len(im) == 6
+    idx, dist = im.search(hvs[4:5], 1)
+    assert idx[0, 0] == 3 and dist[0, 0] == 0
+
+    with pytest.raises(ValueError, match="k must be in"):
+        im.search(hvs[:1], 7)
+    with pytest.raises(IndexError):
+        im.delete([99])
+    with pytest.raises(ValueError, match="d="):
+        im.add(np.ones((1, 99), np.float32))
+
+
+def test_item_memory_accepts_packed_queries():
+    im = ItemMemory(d=64, impl="jnp")
+    words = RNG.integers(0, 1 << 32, (5, 2), dtype=np.uint32)
+    im.add_packed(words)
+    idx, dist = im.search(words, 2)
+    np.testing.assert_array_equal(idx[:, 0], np.arange(5))
+    assert np.all(dist[:, 0] == 0)
+    _assert_topk_rows_sorted(idx, dist)
+
+
+# ---------------------------------------------------------------------------
+# serving: engine search, op-tagged batcher, pool drain
+# ---------------------------------------------------------------------------
+
+
+def test_engine_search_matches_search_packed():
+    cfg = _cfg()
+    model = _trained(cfg)
+    engine = ServingEngine(model, batch_size=8)
+    q = _queries(cfg)
+    oi, od = search_packed(
+        model, jnp.asarray(q), engine.class_words, k=3, impl=engine.impl
+    )
+    idx, dist = engine.search(q, 3)
+    np.testing.assert_array_equal(idx, np.asarray(oi))
+    np.testing.assert_array_equal(dist, np.asarray(od))
+    # k=1 column == predict labels
+    labels = engine.predict(q)
+    np.testing.assert_array_equal(engine.search(q, 1)[0][:, 0], labels)
+
+
+def test_batcher_never_mixes_ops_in_one_device_step():
+    """A search block queued between two predict blocks must get its own
+    device step — one batch is one op (and one k)."""
+    cfg = _cfg()
+    engine = ServingEngine(_trained(cfg), batch_size=16)
+    batcher = MicroBatcher(engine)  # manual stepping
+    q = _queries(cfg, 9)
+    p1 = batcher.submit_block(q[:3])
+    s1 = batcher.submit_search_block(q[3:6], 4)
+    p2 = batcher.submit_block(q[6:9])
+    # 3 steps despite all 9 fitting one batch: ops split the queue
+    assert batcher.step() == 3 and all(f.done() for f in p1)
+    assert not any(f.done() for f in s1)
+    assert batcher.step() == 3 and all(f.done() for f in s1)
+    assert batcher.step() == 3 and all(f.done() for f in p2)
+    idx, dist = s1[0].result()
+    assert idx.shape == (4,) and dist.shape == (4,)
+    expect_i, expect_d = engine.search(q[3:6], 4)
+    np.testing.assert_array_equal(idx, expect_i[0])
+    np.testing.assert_array_equal(dist, expect_d[0])
+    with pytest.raises(ValueError, match="k"):
+        batcher.submit_search_block(q[:2], 0)
+
+
+def test_pool_drain_undrain_and_exhaustion():
+    cfg = _cfg()
+    model = _trained(cfg)
+    pool = ReplicaPool(
+        [ServingEngine(model, batch_size=8) for _ in range(3)],
+        max_delay_ms=1.0,
+    ).start()
+    try:
+        q = _queries(cfg, 4)
+        assert pool.draining == ()
+        pool.drain(1)
+        assert pool.draining == (1,)
+        assert pool.describe()["draining"] == [1]
+        # dispatch avoids the drained replica entirely
+        before = pool.n_dispatched[1]
+        for _ in range(6):
+            futs = pool.submit_search_block(q, 2)
+            for f in futs:
+                f.result(timeout=10)
+        assert pool.n_dispatched[1] == before
+        pool.drain(0)
+        pool.drain(2)
+        with pytest.raises(RuntimeError, match="draining"):
+            pool.submit_block(q)
+        pool.undrain(0)
+        labels = [f.result(timeout=10) for f in pool.submit_block(q)]
+        assert len(labels) == 4
+        pool.undrain(1)  # idempotent
+        pool.undrain(1)
+        assert pool.draining == (2,)
+        with pytest.raises(IndexError):
+            pool.drain(5)
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# wire protocol codecs
+# ---------------------------------------------------------------------------
+
+
+def test_search_result_codec_round_trip():
+    idx = RNG.integers(0, 1000, (6, 4)).astype(np.int32)
+    dist = np.sort(RNG.integers(0, 128, (6, 4)).astype(np.int32), axis=1)
+    body = protocol.encode_search_result(idx, dist)
+    assert len(body) == 6 * 4 * 4 * 2
+    ri, rd = protocol.decode_search_result(body, 4)
+    np.testing.assert_array_equal(ri, idx)
+    np.testing.assert_array_equal(rd, dist)
+    with pytest.raises(ValueError, match="multiple"):
+        protocol.decode_search_result(body[:-3], 4)
+    with pytest.raises(ValueError, match="multiple"):
+        protocol.decode_search_result(b"", 4)
+    with pytest.raises(ValueError, match="shape"):
+        protocol.encode_search_result(idx, dist[:, :2])
+
+
+def test_parse_search_json_forms_and_k():
+    q = [[1.0, 2.0], [3.0, 4.0]]
+    arr, k, single = protocol.parse_search_json({"queries": q, "k": 3})
+    assert arr.shape == (2, 2) and k == 3 and not single
+    arr, k, single = protocol.parse_search_json({"query": [1.0, 2.0]})
+    assert arr.shape == (1, 2) and k == 1 and single
+    for bad in (
+        {"queries": q, "query": [1.0]},
+        {},
+        {"queries": []},
+        {"query": q},
+    ):
+        with pytest.raises(ValueError):
+            protocol.parse_search_json(bad)
+    for bad_k in (0, -1, 2.5, "two", True, None):
+        with pytest.raises(ValueError, match="k"):
+            protocol.parse_search_json({"queries": q, "k": bad_k})
+    assert protocol.parse_k("7") == 7
+    assert protocol.parse_k(3.0) == 3
+
+
+# ---------------------------------------------------------------------------
+# HTTP end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def stack():
+    registries, servers, clients = [], [], []
+
+    def build(model, name="m", *, batch_size=8, pool_replicas=0):
+        registry = ModelRegistry()
+        if pool_replicas:
+            registry.register_pool(
+                name,
+                [ServingEngine(model, batch_size=batch_size)
+                 for _ in range(pool_replicas)],
+                start=True, max_delay_ms=1.0,
+            )
+        else:
+            registry.register(
+                name, ServingEngine(model, batch_size=batch_size),
+                start=True, max_delay_ms=1.0,
+            )
+        server = HdcHttpServer(registry).start()
+        client = HdcClient(*server.address)
+        registries.append(registry)
+        servers.append(server)
+        clients.append(client)
+        return registry, server, client
+
+    yield build
+    for client in clients:
+        client.close()
+    for server in servers:
+        server.stop()
+    for registry in registries:
+        registry.shutdown()
+
+
+def test_http_search_binary_json_and_k1_parity(stack):
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry, server, client = stack(model)
+    q = _queries(cfg, 10)
+    cw = registry.engine("m").class_words
+    oi, od = search_packed(
+        model, jnp.asarray(q), cw, k=3, impl=registry.engine("m").impl
+    )
+    oi, od = np.asarray(oi), np.asarray(od)
+
+    bi, bd = client.search("m", q, 3)  # raw f32 out, raw i32 back
+    np.testing.assert_array_equal(bi, oi)
+    np.testing.assert_array_equal(bd, od)
+    ji, jd = client.search("m", q, 3, binary=False)  # JSON batch form
+    np.testing.assert_array_equal(ji, oi)
+    np.testing.assert_array_equal(jd, od)
+
+    # JSON single form answers flat lists
+    body = json.dumps({"query": q[0].tolist(), "k": 2}).encode()
+    out = client._json(
+        "POST", protocol.search_path("m"), body,
+        {"Content-Type": protocol.CT_JSON},
+    )
+    assert out["indices"] == oi[0][:2].tolist()
+    assert out["distances"] == od[0][:2].tolist()
+
+    # k defaults to 1 and equals predict
+    labels = client.predict_batch("m", q)
+    np.testing.assert_array_equal(client.search("m", q)[0][:, 0], labels)
+
+    # the id header is adopted, echoed, and resolvable in the trace ring
+    client.search("m", q[:1], 2, request_id="cli-search1")
+    assert client.last_request_id == "cli-search1"
+    assert client.traces(request_id="cli-search1")
+
+
+def test_http_search_error_paths(stack):
+    cfg = _cfg()
+    registry, server, client = stack(_trained(cfg))
+    q = _queries(cfg, 3)
+    cases = [
+        ({"queries": q.tolist(), "k": cfg.n_classes + 1}, "k beyond store"),
+        ({"queries": q.tolist(), "k": 0}, "k=0"),
+        ({"queries": q.tolist(), "k": 2.5}, "fractional k"),
+        ({"queries": q[:, :-1].tolist()}, "feature mismatch"),
+    ]
+    for body, why in cases:
+        with pytest.raises(TransportError) as e:
+            client._json(
+                "POST", protocol.search_path("m"),
+                json.dumps(body).encode(),
+                {"Content-Type": protocol.CT_JSON},
+            )
+        assert e.value.status == 400, why
+    with pytest.raises(TransportError) as e:
+        client.search("nope", q, 1)
+    assert e.value.status == 404
+    # bad ?k= on the binary form
+    with pytest.raises(TransportError) as e:
+        client._json(
+            "POST", protocol.search_path("m") + "?k=abc",
+            protocol.encode_images(q), {"Content-Type": protocol.CT_F32},
+        )
+    assert e.value.status == 400
+
+
+def test_http_search_pool_and_healthz_draining(stack):
+    cfg = _cfg()
+    model = _trained(cfg)
+    registry, server, client = stack(model, pool_replicas=2)
+    q = _queries(cfg, 6)
+    pool = registry.batcher("m")
+
+    i0, d0 = client.search("m", q, 4)
+    health = client.healthz()["models"]["m"]
+    assert health["draining"] == []
+    assert all(not r["draining"] for r in health["replicas"])
+
+    pool.drain(0)
+    health = client.healthz()["models"]["m"]
+    assert health["draining"] == [0]
+    assert health["replicas"][0]["draining"]
+    assert not health["replicas"][1]["draining"]
+    # still serving, bit-identically, on the surviving replica
+    i1, d1 = client.search("m", q, 4)
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_array_equal(d1, d0)
+
+    pool.drain(1)
+    with pytest.raises(TransportError) as e:
+        client.search("m", q, 1)
+    assert e.value.status == 503
+    pool.undrain(0)
+    np.testing.assert_array_equal(client.search("m", q, 4)[0], i0)
+
+
+# ---------------------------------------------------------------------------
+# fleet aggregator: per-target scrape-latency histograms
+# ---------------------------------------------------------------------------
+
+
+def test_aggregator_scrape_latency_histograms():
+    from repro.obs.aggregator import (
+        FleetAggregator,
+        LocalTarget,
+        render_fleet_prometheus,
+    )
+
+    cfg = _cfg()
+    registry = ModelRegistry()
+    registry.register(
+        "m", ServingEngine(_trained(cfg), batch_size=4),
+        start=True, max_delay_ms=1.0,
+    )
+
+    class DeadTarget:
+        name = "dead"
+
+        def scrape(self):
+            raise ConnectionError("down")
+
+        def close(self):
+            pass
+
+    agg = FleetAggregator(
+        [LocalTarget(registry, name="local"), DeadTarget()], interval_s=0.05
+    )
+    try:
+        for _ in range(3):
+            agg.scrape_once()
+        lat = agg.scrape_latencies()
+        # every attempt observes — successes and failures alike
+        assert lat["local"].count == 3 and lat["dead"].count == 3
+        text = render_fleet_prometheus(agg)
+        assert 'uhd_fleet_scrape_seconds_count{target="local"} 3' in text
+        assert 'uhd_fleet_scrape_seconds_count{target="dead"} 3' in text
+        assert 'uhd_fleet_scrape_seconds_bucket{target="local"' in text
+        local = [t for t in agg.fleet()["targets"] if t["name"] == "local"][0]
+        assert local["scrape_p50_ms"] is not None
+        assert local["scrape_p99_ms"] >= local["scrape_p50_ms"]
+    finally:
+        agg.stop()
+        registry.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# sharded search: 8-device bit-identity (subprocess: device count must
+# be fixed before jax initializes)
+# ---------------------------------------------------------------------------
+
+
+_MESH8_SEARCH_PROGRAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import HDCConfig, HDCModel, search_packed
+    from repro.serving import ServingEngine, ShardedExecution
+
+    assert jax.device_count() == 8, jax.device_count()
+    rng = np.random.default_rng(10)
+    for encoder in ("uhd", "uhd_dynamic"):
+        # D = 1000: d_local = 125 per shard, 125 % 32 != 0 — every
+        # shard's ragged pad bits must cancel out of the psum exactly
+        cfg = HDCConfig(n_features=24, n_classes=6, d=1000, levels=16,
+                        similarity="hamming", encoder=encoder, sobol_skip=3)
+        x = jnp.asarray(rng.uniform(0, 255, (48, 24)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 6, (48,)), jnp.int32)
+        model = HDCModel.create(cfg).fit(x, y)
+        q = np.asarray(rng.uniform(0, 255, (16, 24)), np.float32)
+
+        sharded = ServingEngine(
+            model, batch_size=16,
+            execution=ShardedExecution(devices=jax.devices()),
+        )
+        plain = ServingEngine(model, batch_size=16)
+        for k in (1, 3, 6):
+            ei, ed = plain.search(q, k)
+            si, sd = sharded.search(q, k)
+            np.testing.assert_array_equal(si, ei, err_msg=f"{encoder} k={k}")
+            np.testing.assert_array_equal(sd, ed, err_msg=f"{encoder} k={k}")
+        # k=1 equals predict under sharding too
+        np.testing.assert_array_equal(
+            sharded.search(q, 1)[0][:, 0], np.asarray(plain.predict(q))
+        )
+    print("OK")
+""")
+
+
+def test_sharded_search_mesh8_bit_identical_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", _MESH8_SEARCH_PROGRAM],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+    )
+    assert "OK" in r.stdout, r.stderr[-2000:]
